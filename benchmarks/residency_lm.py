@@ -1,0 +1,109 @@
+"""ShortcutFusion residency planning applied to the LM stacks
+(EXPERIMENTS.md §Perf, iteration set 3 -- the paper-representative cell).
+
+For each (arch x shape) the planner chooses per transformer block between
+  streaming  (row-reuse analogue): weights + activations round-trip HBM
+  resident   (frame-reuse analogue): fused Pallas block, shortcut pinned
+             in VMEM, weights streamed exactly once
+under the 128 MiB VMEM budget, using (a) the paper's single-cut policy and
+(b) the beyond-paper DP.  Reports HBM bytes/step/device and the est. step
+time, vs the all-streaming baseline.
+"""
+from __future__ import annotations
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.core.hw import V5E
+from repro.core.residency import (LMBlockSpec, plan_cutpoint, plan_dp,
+                                  streaming_baseline)
+from repro.utils.costmodel import _ffn_flops, _layer_kinds, forward_flops
+
+
+def make_blocks(cfg: ModelConfig, cell: ShapeCell, chips: int = 256,
+                model_shards: int = 16, batch_shards: int = 16,
+                dtype_bytes: int = 2) -> list[LMBlockSpec]:
+    """Per-device LMBlockSpecs for one step of this cell."""
+    S = 1 if cell.mode == "decode" else cell.seq_len
+    B_loc = max(1, cell.global_batch // batch_shards)
+    d = cfg.d_model
+    stream = B_loc * S * d * dtype_bytes
+    param_shards = model_shards * (batch_shards if cfg.param_count()
+                                   * dtype_bytes > 40e9 else 1)
+    per_layer_params = (cfg.param_count() - cfg.vocab * d) / cfg.n_layers
+    w_bytes = int(per_layer_params * dtype_bytes / param_shards)
+    kinds = _layer_kinds(cfg)
+    layer_flops = forward_flops(cfg, S, S if cell.mode == "decode"
+                                else (S + 1) / 2, cell.mode) / len(kinds)
+    blocks = []
+    for i, kind in enumerate(kinds):
+        ff_loc = cfg.d_ff / model_shards if cfg.d_ff else d
+        heads_loc = max(1, (cfg.n_heads or 8) / model_shards)
+        act = int(B_loc * S * (4 * heads_loc * cfg.hd + 3 * ff_loc + 2 * d)
+                  * dtype_bytes)
+        kv = 0
+        if kind in ("global", "local", "encdec"):
+            eff = min(cell.seq_len, cfg.window) if kind == "local" \
+                else cell.seq_len
+            kv = int(2 * B_loc * eff * max(1, cfg.n_kv_heads
+                                           / model_shards) * cfg.hd
+                     * dtype_bytes)
+        elif kind == "ssm":
+            kv = int(B_loc * cfg.ssm_nheads * cfg.ssm_headdim
+                     * cfg.ssm_state * 4 / model_shards)
+        elif kind == "recurrent":
+            kv = int(B_loc * (cfg.lru_width or d) * 4 / model_shards)
+        mexp = cfg.n_experts if (cfg.n_experts and kind == "global") else 0
+        blocks.append(LMBlockSpec(
+            idx=i,
+            kind="moe" if mexp else kind,
+            weight_bytes=w_bytes,
+            stream_bytes=stream,
+            act_bytes=act,
+            flops=int(B_loc * cell.global_batch / max(cell.global_batch, 1)
+                      * layer_flops / chips * chips / batch_shards),
+            state_bytes=kv if cell.mode == "decode" else 0))
+    return blocks
+
+
+def report(arch: str, shape: str) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    blocks = make_blocks(cfg, cell)
+    base = streaming_baseline(blocks, V5E)
+    cut = plan_cutpoint(blocks, V5E)
+    dp = plan_dp(blocks, V5E)
+    gb = 1 / (1 << 30)
+    return {
+        "arch": arch, "shape": shape,
+        "streaming_hbm_gb": round(base.hbm_bytes * gb, 3),
+        "cutpoint_hbm_gb": round(cut.hbm_bytes * gb, 3),
+        "dp_hbm_gb": round(dp.hbm_bytes * gb, 3),
+        "streaming_ms": round(1e3 * base.est_seconds, 3),
+        "cutpoint_ms": round(1e3 * cut.est_seconds, 3),
+        "dp_ms": round(1e3 * dp.est_seconds, 3),
+        "cut": cut.cut,
+        "resident_blocks": dp.n_resident,
+        "vmem_peak_mb": round(dp.vmem_peak / (1 << 20), 1),
+        "hbm_reduction_pct": round(
+            100 * (1 - dp.hbm_bytes / max(base.hbm_bytes, 1)), 1),
+    }
+
+
+def main() -> None:
+    print("arch,shape,streaming_hbm,dp_hbm,reduction%,streaming_ms,dp_ms,"
+          "resident,vmem_mb")
+    for arch, shape in [
+        ("granite-20b", "decode_32k"), ("granite-20b", "prefill_32k"),
+        ("gemma2-27b", "decode_32k"), ("moonshot-v1-16b-a3b", "decode_32k"),
+        ("smollm-360m", "decode_32k"), ("mamba2-2.7b", "decode_32k"),
+        ("qwen3-moe-235b-a22b", "decode_32k"),
+    ]:
+        r = report(arch, shape)
+        print(f"{r['arch']},{r['shape']},{r['streaming_hbm_gb']}GB,"
+              f"{r['dp_hbm_gb']}GB,{r['hbm_reduction_pct']}%,"
+              f"{r['streaming_ms']}ms,{r['dp_ms']}ms,"
+              f"{r['resident_blocks']},{r['vmem_peak_mb']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Assemble the roofline table (EXPERIMENTS.md §Roofline) from the
+dry-run JSON artifacts in experiments/dryrun/."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def load(out_dir="experiments/dryrun", mesh="pod1") -> list[dict]:
+    rows = []
+    for f in sorted(Path(out_dir).glob(f"*_{mesh}.json")):
+        r = json.loads(f.read_text())
+        if r.get("ok"):
+            rows.append(r)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{1e3 * x:.1f}ms"
+    return f"{1e6 * x:.0f}us"
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | plan | compute | memory | collective | "
+           "dominant | useful | MFU-bound | args/dev | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows = sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    lines = [hdr]
+    for r in rows:
+        rf = r["roofline"]
+        uf = rf.get("useful_flops_frac") or 0.0
+        mfu = rf.get("mfu_bound") or 0.0
+        gib = r["total_arg_bytes_per_device"] / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('plan', '?')} | "
+            f"{fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+            f"{fmt_s(rf['collective_s'])} | **{rf['dominant']}** | "
+            f"{uf:.2f} | {100 * mfu:.1f}% | {gib:.2f} GiB | "
+            f"{'Y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh)
+    print(markdown_table(rows))
+    print(f"\n{len(rows)} cells")
+    # summary of bottleneck distribution
+    from collections import Counter
+    c = Counter(r["roofline"]["dominant"] for r in rows)
+    print("bottlenecks:", dict(c))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Benchmark harness: one function per paper table (see paper_tables.py)
+plus LM-framework micro-benchmarks.  Prints ``table,network,metric,ours,
+paper`` CSV rows and a compiler-throughput line.
+"""
+from __future__ import annotations
+
+import time
+
+
+def run_paper_tables() -> None:
+    from benchmarks.paper_tables import ALL_TABLES
+    print("table,network,metric,ours,paper")
+    for fn in ALL_TABLES:
+        t0 = time.time()
+        for row in fn():
+            print(row.csv())
+        print(f"# {fn.__name__}: {time.time() - t0:.1f}s")
+
+
+def run_lm_micro() -> None:
+    """Micro-benchmarks of the LM substrate on CPU (smoke-size): step
+    latency for train/prefill/decode per family."""
+    import jax
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.models.model import build_model
+
+    print("bench,arch,us_per_call,derived")
+    for arch in ["smollm-360m", "gemma2-2b", "qwen3-moe-235b-a22b",
+                 "mamba2-2.7b", "recurrentgemma-2b"]:
+        cfg = smoke_config(arch).replace(max_seq=64)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (2, 64), 0,
+                                    cfg.vocab)
+        batch = {"tokens": tokens, "labels": tokens}
+        if cfg.family == "vlm":
+            batch["patches"] = np.zeros((2, cfg.vision_seq, cfg.d_model),
+                                        np.float32)
+        loss_fn = jax.jit(model.loss)
+        loss_fn(params, batch)[0].block_until_ready()
+        t0 = time.time()
+        n = 5
+        for _ in range(n):
+            loss_fn(params, batch)[0].block_until_ready()
+        dt = (time.time() - t0) / n
+        print(f"train_loss,{arch},{1e6 * dt:.0f},"
+              f"tok_per_s={2 * 64 / dt:.0f}")
+
+
+def run_kernel_micro() -> None:
+    """Interpret-mode kernel calls (correctness-path timing only; TPU
+    numbers come from the roofline analysis)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import fused_block_ref
+
+    print("bench,kernel,us_per_call,derived")
+    m, d, f = 512, 256, 1024
+    x = jax.random.normal(jax.random.key(0), (m, d), jnp.float32)
+    scale = jnp.zeros((d,))
+    wg = jax.random.normal(jax.random.key(1), (d, f)) * d ** -0.5
+    wu = jax.random.normal(jax.random.key(2), (d, f)) * d ** -0.5
+    wd = jax.random.normal(jax.random.key(3), (f, d)) * f ** -0.5
+    ref = jax.jit(lambda *a: fused_block_ref(*a))
+    ref(x, scale, wg, wu, wd).block_until_ready()
+    t0 = time.time()
+    for _ in range(10):
+        ref(x, scale, wg, wu, wd).block_until_ready()
+    dt = (time.time() - t0) / 10
+    flops = 3 * 2 * m * d * f
+    print(f"fused_block_ref,{m}x{d}x{f},{1e6 * dt:.0f},"
+          f"gflops={flops / dt / 1e9:.1f}")
+
+
+def main() -> None:
+    run_paper_tables()
+    run_lm_micro()
+    run_kernel_micro()
+
+
+if __name__ == "__main__":
+    main()

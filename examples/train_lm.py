@@ -1,0 +1,48 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+on CPU with the full production stack (pipeline, AdamW, checkpointing,
+preemption guard, straggler monitor).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The config is a width-reduced smollm (same family/code path as the
+assigned arch); loss should fall from ~ln(V)=9.6 to well below 7.
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.launch.train import TrainConfig, train
+from repro.optim.adamw import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: smollm family, 12 layers, d=640
+    cfg = get_config("smollm-360m").replace(
+        name="smollm-100m", n_layers=12, d_model=640, n_heads=8,
+        n_kv_heads=4, head_dim=80, d_ff=1920, max_seq=args.seq,
+        dtype="float32")
+    print(f"training {cfg.name}: {cfg.param_count() / 1e6:.0f}M params, "
+          f"seq {args.seq}, batch {args.batch}")
+
+    dc = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                    vocab=cfg.vocab, seed=0)
+    tc = TrainConfig(steps=args.steps, log_every=20, ckpt_every=100,
+                     ckpt_dir=args.ckpt_dir,
+                     opt=AdamWConfig(lr=6e-4, warmup_steps=50,
+                                     total_steps=args.steps))
+    out = train(cfg, tc, data_cfg=dc)
+    first, last = out["losses"][0][1], out["losses"][-1][1]
+    print(f"\nloss {first:.3f} -> {last:.3f} in {out['wall_s']:.0f}s "
+          f"({len(out['stragglers'])} straggler steps flagged)")
+    assert last < first - 1.0, "loss should drop by >1 nat"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Direct JAX execution of a compiler IR graph.
+
+This is the paper's "unified software reference code for hardware
+verification" (Fig. 4): the same network semantics, executed op-by-op with
+no memory schedule.  The functional simulator (core/simulator.py) must match
+it bit-for-bit in fp32 -- any buffer-allocation bug shows up as corruption.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ir import Graph, LayerNode
+
+
+def init_params(graph: Graph, seed: int = 0) -> dict[int, np.ndarray]:
+    """Per-node weights, NHWC kernels [k, k, cin/groups, cout]."""
+    rng = np.random.default_rng(seed)
+    params: dict[int, np.ndarray] = {}
+    for n in graph:
+        if n.kind == "conv":
+            shape = (n.k, n.k, n.in_ch // n.groups, n.out_ch)
+        elif n.kind == "dwconv":
+            shape = (n.k, n.k, 1, n.in_ch)
+        elif n.kind == "fc":
+            shape = (n.in_ch, n.out_ch)
+        else:
+            continue
+        params[n.idx] = (rng.standard_normal(shape, dtype=np.float32)
+                        * (2.0 / np.sqrt(np.prod(shape[:-1]))))
+    return params
+
+
+def _act(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "relu":
+        return jax.nn.relu(x)
+    if act == "leaky":
+        return jnp.where(x > 0, x, 0.1 * x)
+    if act == "swish":
+        return x * jax.nn.sigmoid(x)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    return x
+
+
+def apply_node(n: LayerNode, operands: list[jnp.ndarray],
+               params: dict[int, np.ndarray]) -> jnp.ndarray:
+    """Execute one IR node.  operands follow n.inputs order; activations are
+    NHWC with a leading batch of 1."""
+    x = operands[0]
+    if n.kind in ("conv", "dwconv"):
+        w = jnp.asarray(params[n.idx])
+        fgc = n.in_ch if n.kind == "dwconv" else n.groups
+        y = jax.lax.conv_general_dilated(
+            x, w, window_strides=(n.stride, n.stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=fgc)
+        return _act(y, n.act)
+    if n.kind == "fc":
+        w = jnp.asarray(params[n.idx])
+        y = x.reshape(x.shape[0], -1) @ w
+        return _act(y, n.act).reshape(x.shape[0], 1, 1, n.out_ch)
+    if n.kind == "maxpool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, n.k, n.k, 1),
+            (1, n.stride, n.stride, 1), "SAME")
+    if n.kind == "avgpool":
+        s = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, n.k, n.k, 1),
+            (1, n.stride, n.stride, 1), "SAME")
+        return s / (n.k * n.k)
+    if n.kind == "globalpool":
+        return jnp.mean(x, axis=(1, 2), keepdims=True)
+    if n.kind == "upsample":
+        return jnp.repeat(jnp.repeat(x, n.stride, axis=1), n.stride, axis=2)
+    if n.kind == "add":
+        return operands[0] + operands[1]
+    if n.kind == "concat":
+        return jnp.concatenate(operands, axis=-1)
+    if n.kind == "route":
+        if n.out_ch == 4 * n.in_ch:          # space-to-depth (YOLOv2 reorg)
+            b, h, w, c = x.shape
+            x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+            return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h // 2, w // 2, 4 * c)
+        return x                              # identity passthrough
+    if n.kind == "scale":
+        se = operands[1].reshape(1, 1, 1, -1)  # [1,1,1,C] channel gates
+        return x * se
+    raise ValueError(f"cannot execute node kind {n.kind}")
+
+
+def run_graph(graph: Graph, params: dict[int, np.ndarray],
+              x: np.ndarray) -> dict[int, jnp.ndarray]:
+    """Execute every node; returns all node outputs keyed by idx."""
+    outs: dict[int, jnp.ndarray] = {}
+    for n in graph:
+        if n.kind == "input":
+            outs[n.idx] = jnp.asarray(x)
+            continue
+        operands = [outs[i] for i in n.inputs]
+        outs[n.idx] = apply_node(n, operands, params)
+    return outs

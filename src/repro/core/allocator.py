@@ -1,0 +1,203 @@
+"""Reuse-aware static memory allocation (paper Algorithm 1, §IV-A).
+
+Given a grouped graph and a data-reuse policy L (mode per group, 'row' or
+'frame'), statically assign the three interchangeable physical buffers
+{0,1,2} to the input / output / shortcut tensors of every frame-mode group,
+maximising on-chip shortcut reuse.  Buffer sizes are the max over all
+tensors assigned to each buffer (Algorithm 1).
+
+Deviations from the paper, all conservative:
+  * allocation is simulated with exact liveness at *group* granularity
+    (instructions are per group, Fig. 5b), which reproduces the paper's
+    hand-drawn allocations of Fig. 13 for plain / residual / SE blocks;
+  * tensors that cannot be held (no free buffer, e.g. FPN lateral data and
+    concat operands -- the paper's "long-path" data) are spilled to DRAM,
+    exactly as §IV-A prescribes for long-lifetime data;
+  * small SE side-path tensors (global-pool + FC outputs) live in a
+    dedicated side space, as in Fig. 13(c)/(d).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.grouping import Group, GroupedGraph
+
+NUM_BUFFERS = 3
+SIDE_THRESHOLD = 64 << 10           # tensors <= 64 KB ride in the side space
+GRAPH_INPUT = -1                    # pseudo producer id of the input image
+
+Policy = dict[int, str]             # gid -> 'row' | 'frame'
+
+
+@dataclass
+class Allocation:
+    policy: Policy
+    alloc_in: dict[int, int] = field(default_factory=dict)
+    alloc_out: dict[int, int] = field(default_factory=dict)
+    alloc_shortcut: dict[int, int] = field(default_factory=dict)
+    buff: list[int] = field(default_factory=lambda: [0] * NUM_BUFFERS)
+    side_buff: int = 0
+    # gids whose output was spilled to DRAM although produced in frame mode
+    spilled: set[int] = field(default_factory=set)
+    # gids whose output additionally crosses a frame->row/final boundary
+    boundary_writes: set[int] = field(default_factory=set)
+    # frame gids reading (an) input from DRAM (row->frame boundary, spill
+    # re-reads, concat gathers).  gid -> bytes read
+    boundary_reads: dict[int, int] = field(default_factory=dict)
+
+    @property
+    def total_fm_buffer(self) -> int:
+        return sum(self.buff) + self.side_buff
+
+
+def _is_side(gg: GroupedGraph, g: Group) -> bool:
+    """SE side-path groups (global-pool / FC chains with tiny outputs)."""
+    return (g.head.kind in ("fc", "globalpool")
+            and g.out_size <= SIDE_THRESHOLD
+            and g.head.out_h == 1 and g.head.out_w == 1)
+
+
+def allocate(gg: GroupedGraph, policy: Policy) -> Allocation:
+    alloc = Allocation(policy=dict(policy))
+
+    # Consumer counts at group level (plus 1 virtual consumer for the final
+    # network output so it is always written out).
+    consumers: dict[int, list[int]] = {g.gid: gg.group_consumers(g)
+                                       for g in gg.groups}
+    remaining = {gid: len(c) for gid, c in consumers.items()}
+
+    # location of each produced tensor: buffer id, 'side', or 'dram'
+    location: dict[int, int | str] = {GRAPH_INPUT: "dram"}
+    live_in_buffer: dict[int, int] = {}          # buffer id -> producing gid
+
+    def free_buffer_for(exclude: set[int]) -> int | None:
+        for b in range(NUM_BUFFERS):
+            if b not in live_in_buffer and b not in exclude:
+                return b
+        return None
+
+    def release_if_dead(gid: int) -> None:
+        if gid == GRAPH_INPUT or remaining.get(gid, 0) > 0:
+            return
+        loc = location.get(gid)
+        if isinstance(loc, int) and live_in_buffer.get(loc) == gid:
+            del live_in_buffer[loc]
+
+    for g in gg.groups:
+        mode = policy[g.gid]
+        gin = gg.group_inputs(g)
+        sc_src = gg.shortcut_source_group(g)
+
+        if _is_side(gg, g):
+            # SE side path: on-chip side space regardless of mode.
+            alloc.side_buff = max(alloc.side_buff, g.out_size)
+            location[g.gid] = "side"
+            for src in gin:
+                remaining[src] = remaining.get(src, 1) - 1
+                release_if_dead(src)
+            continue
+
+        if mode == "row":
+            # Feature maps stream through DRAM; no {0,1,2} assignment.
+            location[g.gid] = "dram"
+            for src in gin:
+                remaining[src] = remaining.get(src, 1) - 1
+                # A frame-produced tensor consumed by a row group must have
+                # been written to DRAM at the boundary.
+                if isinstance(location.get(src), int):
+                    alloc.boundary_writes.add(src)
+                release_if_dead(src)
+            continue
+
+        # ---------------------------------------------------- frame mode
+        in_buffers: set[int] = set()
+        read_bytes = 0
+        for src in gin:
+            loc = location.get(src, "dram")
+            if isinstance(loc, int):
+                in_buffers.add(loc)
+            elif loc == "dram":
+                # row->frame boundary (or spilled/long-path data): the
+                # group's input is fetched from DRAM into its input buffer.
+                src_size = (gg.graph.nodes[0].out_size if src == GRAPH_INPUT
+                            else gg.groups[src].out_size)
+                read_bytes += src_size
+        if read_bytes:
+            alloc.boundary_reads[g.gid] = (
+                alloc.boundary_reads.get(g.gid, 0) + read_bytes)
+
+        # Record alloc_in / alloc_shortcut from where the operands live.
+        main_src = gin[0] if gin else GRAPH_INPUT
+        main_loc = location.get(main_src, "dram")
+        if isinstance(main_loc, int):
+            alloc.alloc_in[g.gid] = main_loc
+            alloc.buff[main_loc] = max(alloc.buff[main_loc], g.in_size)
+        else:
+            b = free_buffer_for(set())
+            if b is not None:
+                alloc.alloc_in[g.gid] = b
+                alloc.buff[b] = max(alloc.buff[b], g.in_size)
+                # transient: the fetched input lives only during this group,
+                # but the output must not clobber it while it is being read.
+                in_buffers.add(b)
+        if sc_src is not None:
+            sloc = location.get(sc_src, "dram")
+            if isinstance(sloc, int):
+                alloc.alloc_shortcut[g.gid] = sloc
+                alloc.buff[sloc] = max(alloc.buff[sloc],
+                                       gg.groups[sc_src].out_size)
+
+        # Consume inputs (shortcut included -- group_inputs covers it).
+        for src in gin:
+            remaining[src] = remaining.get(src, 1) - 1
+
+        # Concat operands are long-path by definition: producers must have
+        # spilled (handled below when the producer ran) or be re-read.
+        if remaining.get(g.gid, 0) == 0:
+            # Final output: written straight to DRAM through the write
+            # buffer (eq. 5 final_layers term).
+            location[g.gid] = "dram"
+            alloc.boundary_writes.add(g.gid)
+        else:
+            exclude = set(in_buffers)
+            b = free_buffer_for(exclude)
+            if b is None:
+                # reuse the main input's buffer if the input dies here
+                if (isinstance(main_loc, int)
+                        and remaining.get(main_src, 0) == 0
+                        and live_in_buffer.get(main_loc) == main_src):
+                    del live_in_buffer[main_loc]
+                    b = main_loc
+            if b is None:
+                # Long-path data (paper §IV-A): spill to DRAM.
+                location[g.gid] = "dram"
+                alloc.spilled.add(g.gid)
+            else:
+                location[g.gid] = b
+                live_in_buffer[b] = g.gid
+                alloc.alloc_out[g.gid] = b
+                alloc.buff[b] = max(alloc.buff[b], g.out_size)
+
+        for src in gin:
+            release_if_dead(src)
+
+    return alloc
+
+
+def frame_feasible(gg: GroupedGraph, policy: Policy,
+                   alloc: Allocation, long_path_span: int = 8) -> bool:
+    """Constraint (10) check: frame-mode feature maps must stay on-chip.
+
+    Spills are tolerated only for genuinely long-path data: concat/route
+    operands and shortcut spans longer than ``long_path_span`` groups (the
+    paper stores those off-chip by design)."""
+    for gid in alloc.spilled:
+        g = gg.groups[gid]
+        cons = gg.group_consumers(g)
+        long_path = any(gg.groups[c].kind in ("concat", "route") for c in cons)
+        if not long_path:
+            span = max((c - gid for c in cons), default=0)
+            long_path = span > long_path_span
+        if not long_path:
+            return False
+    return True

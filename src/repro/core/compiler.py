@@ -1,0 +1,106 @@
+"""End-to-end ShortcutFusion compiler: graph -> ExecutionPlan.
+
+Pipeline (Fig. 4): CNN parser & analyzer (grouping) -> block-wise optimizer
+(cut-point search with the reuse-aware allocator + timing/DRAM models) ->
+instruction generation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.allocator import Allocation, allocate
+from repro.core.cutpoint import Candidate, SearchResult, search, sweep_single_cut
+from repro.core.dram import DRAMReport, baseline_total, dram_report
+from repro.core.grouping import GroupedGraph, group_nodes
+from repro.core.hw import FPGAConfig, KCU1500
+from repro.core.ir import Graph
+from repro.core.isa import GroupInstruction, generate_instructions
+from repro.core.sram import SRAMReport, sram_report
+from repro.core.timing import LatencyReport, latency_report
+
+
+@dataclass
+class ExecutionPlan:
+    graph: Graph
+    grouped: GroupedGraph
+    hw: FPGAConfig
+    candidate: Candidate
+    alloc: Allocation
+    sram: SRAMReport
+    dram: DRAMReport
+    latency: LatencyReport
+    instructions: list[GroupInstruction]
+    search: SearchResult | None = None
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def latency_ms(self) -> float:
+        return 1e3 * self.latency.cycles / self.hw.freq
+
+    @property
+    def gops(self) -> float:
+        return 2 * self.graph.total_macs() / (self.latency.cycles / self.hw.freq) / 1e9
+
+    @property
+    def mac_efficiency(self) -> float:
+        return self.gops * 1e9 / self.hw.peak_gops
+
+    @property
+    def baseline_dram(self) -> int:
+        return baseline_total(self.grouped)
+
+    @property
+    def offchip_reduction(self) -> float:
+        base = self.baseline_dram
+        return (base - self.dram.total) / base if base else 0.0
+
+    def summary(self) -> str:
+        mb = 1 / (1 << 20)
+        return (f"{self.graph.name}: {len(self.grouped.groups)} groups, "
+                f"latency {self.latency_ms:.2f} ms, {self.gops:.0f} GOPS "
+                f"(MAC eff {100 * self.mac_efficiency:.1f}%), "
+                f"DRAM {self.dram.total * mb:.1f} MB "
+                f"(fm {self.dram.fm_bytes * mb:.2f} MB, "
+                f"-{100 * self.offchip_reduction:.1f}% vs baseline "
+                f"{self.baseline_dram * mb:.1f} MB), "
+                f"SRAM {self.sram.sram_total * mb:.3f} MB")
+
+
+def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
+                  objective: str = "latency",
+                  policy: dict[int, str] | None = None) -> ExecutionPlan:
+    """Compile a CNN graph.  If ``policy`` is given it is used verbatim
+    (e.g. all-row baseline); otherwise the cut-point optimizer runs."""
+    graph.validate()
+    gg = group_nodes(graph)
+    result: SearchResult | None = None
+    if policy is None:
+        result = search(gg, hw, objective=objective)
+        cand = result.best
+        alloc = cand.alloc
+    else:
+        alloc = allocate(gg, policy)
+        from repro.core.cutpoint import evaluate  # local to avoid cycle
+        cand = Candidate(
+            cuts=(), policy=policy, alloc=alloc,
+            latency_cycles=latency_report(gg, alloc, hw).cycles,
+            dram_total=dram_report(gg, alloc).total,
+            dram_fm=dram_report(gg, alloc).fm_bytes,
+            sram_total=sram_report(gg, alloc, hw).sram_total,
+            bram18k=sram_report(gg, alloc, hw).bram18k,
+            feasible=True)
+    return ExecutionPlan(
+        graph=graph, grouped=gg, hw=hw, candidate=cand, alloc=alloc,
+        sram=sram_report(gg, alloc, hw),
+        dram=dram_report(gg, alloc),
+        latency=latency_report(gg, alloc, hw),
+        instructions=generate_instructions(gg, alloc),
+        search=result)
+
+
+def all_row_policy(gg: GroupedGraph) -> dict[int, str]:
+    return {g.gid: "row" for g in gg.groups}
+
+
+def all_frame_policy(gg: GroupedGraph) -> dict[int, str]:
+    return {g.gid: "frame" for g in gg.groups}

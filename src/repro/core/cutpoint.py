@@ -1,0 +1,231 @@
+"""Cut-point optimizer (paper §IV).
+
+A *block* is a residual block or a standalone group (Fig. 10); all groups in
+a block share one reuse mode.  Feature-map sizes are monotone within runs of
+blocks in modern CNNs, so the search space is restricted to one cut-point
+per monotone run (Fig. 11/12): within a decreasing run, blocks after the cut
+run frame-reuse (small maps fit on-chip); within an increasing run, blocks
+before the cut run frame-reuse.  The optimum is found by exhaustive search
+over the cross-product of cut positions, O(N^k) (paper §IV-B); when the
+product blows past ``exhaustive_limit`` (many short runs, e.g. per-level
+detector heads) we fall back to coordinate descent with restarts, which is
+exact in practice because runs interact only through shared buffer maxima.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+from repro.core.allocator import Allocation, Policy, allocate, frame_feasible
+from repro.core.dram import dram_report
+from repro.core.grouping import GroupedGraph
+from repro.core.hw import FPGAConfig
+from repro.core.sram import sram_report
+from repro.core.timing import latency_report
+
+
+# ------------------------------------------------------------------- blocks
+@dataclass
+class Block:
+    bid: int
+    gids: list[int]
+    out_size: int                 # feature-map bytes at block output
+
+
+def split_blocks(gg: GroupedGraph) -> list[Block]:
+    """Residual blocks (groups up to and including a fused/standalone add
+    whose shortcut source is inside the window) + standalone groups."""
+    blocks: list[Block] = []
+    current: list[int] = []
+    open_shortcuts: set[int] = set()     # gids still awaited as shortcut src
+
+    for g in gg.groups:
+        current.append(g.gid)
+        # does any later group take this one as a shortcut operand?
+        for c in gg.group_consumers(g):
+            cg = gg.groups[c]
+            if cg.fused_add is not None and gg.shortcut_source_group(cg) == g.gid:
+                if c - g.gid <= 8:       # short-path residual
+                    open_shortcuts.add(g.gid)
+        if g.fused_add is not None:
+            src = gg.shortcut_source_group(g)
+            open_shortcuts.discard(src)
+        if not open_shortcuts:
+            blocks.append(Block(bid=len(blocks), gids=current,
+                                out_size=g.out_size))
+            current = []
+    if current:
+        blocks.append(Block(bid=len(blocks), gids=current,
+                            out_size=gg.groups[current[-1]].out_size))
+    return blocks
+
+
+def monotone_runs(blocks: list[Block]) -> list[list[int]]:
+    """Split block indices into monotone runs of out_size (ties extend)."""
+    if not blocks:
+        return []
+    runs: list[list[int]] = [[0]]
+    direction = 0
+    for i in range(1, len(blocks)):
+        prev, cur = blocks[i - 1].out_size, blocks[i].out_size
+        d = 0 if cur == prev else (1 if cur > prev else -1)
+        if d == 0 or direction == 0 or d == direction:
+            runs[-1].append(i)
+            if d != 0:
+                direction = d
+        else:
+            runs.append([i])
+            direction = d
+    return runs
+
+
+def _run_direction(blocks: list[Block], run: list[int]) -> int:
+    return 1 if blocks[run[-1]].out_size >= blocks[run[0]].out_size else -1
+
+
+def policy_from_cuts(gg: GroupedGraph, blocks: list[Block],
+                     runs: list[list[int]], cuts: tuple[int, ...]) -> Policy:
+    """cut c in run r: for decreasing runs blocks[run[c:]] are frame-reuse;
+    for increasing runs blocks[run[:c]] are frame-reuse."""
+    mode_by_block: dict[int, str] = {}
+    for run, cut in zip(runs, cuts):
+        d = _run_direction(blocks, run)
+        for pos, b in enumerate(run):
+            if d < 0:
+                mode_by_block[b] = "frame" if pos >= cut else "row"
+            else:
+                mode_by_block[b] = "frame" if pos < cut else "row"
+    policy: Policy = {}
+    for b, mode in mode_by_block.items():
+        for gid in blocks[b].gids:
+            policy[gid] = mode
+    return policy
+
+
+# ------------------------------------------------------------------- search
+@dataclass
+class Candidate:
+    cuts: tuple[int, ...]
+    policy: Policy
+    alloc: Allocation
+    latency_cycles: float
+    dram_total: int
+    dram_fm: int
+    sram_total: int
+    bram18k: int
+    feasible: bool
+
+    def ms(self, hw: FPGAConfig) -> float:
+        return 1e3 * self.latency_cycles / hw.freq
+
+
+@dataclass
+class SearchResult:
+    best: Candidate
+    evaluated: int
+    runs: list[list[int]]
+    blocks: list[Block] = field(default_factory=list)
+
+
+def evaluate(gg: GroupedGraph, blocks: list[Block], runs: list[list[int]],
+             cuts: tuple[int, ...], hw: FPGAConfig) -> Candidate:
+    policy = policy_from_cuts(gg, blocks, runs, cuts)
+    alloc = allocate(gg, policy)
+    sram = sram_report(gg, alloc, hw)
+    dram = dram_report(gg, alloc)
+    lat = latency_report(gg, alloc, hw)
+    feasible = (sram.sram_total <= hw.sram_budget
+                and frame_feasible(gg, policy, alloc))
+    return Candidate(cuts=cuts, policy=policy, alloc=alloc,
+                     latency_cycles=lat.cycles, dram_total=dram.total,
+                     dram_fm=dram.fm_bytes, sram_total=sram.sram_total,
+                     bram18k=sram.bram18k, feasible=feasible)
+
+
+def _key(c: Candidate, objective: str):
+    big = not c.feasible
+    if objective == "latency":
+        return (big, c.latency_cycles, c.sram_total)
+    if objective == "sram":
+        return (big, c.sram_total, c.latency_cycles)
+    if objective == "dram":
+        return (big, c.dram_total, c.latency_cycles)
+    raise ValueError(objective)
+
+
+def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
+           exhaustive_limit: int = 200_000) -> SearchResult:
+    blocks = split_blocks(gg)
+    runs = monotone_runs(blocks)
+    space = 1
+    for r in runs:
+        space *= len(r) + 1
+
+    evaluated = 0
+    if space <= exhaustive_limit:
+        best: Candidate | None = None
+        for cuts in itertools.product(*[range(len(r) + 1) for r in runs]):
+            c = evaluate(gg, blocks, runs, cuts, hw)
+            evaluated += 1
+            if best is None or _key(c, objective) < _key(best, objective):
+                best = c
+        assert best is not None
+        return SearchResult(best=best, evaluated=evaluated, runs=runs,
+                            blocks=blocks)
+
+    # Coordinate descent with deterministic restarts (incl. the exact
+    # all-row and all-frame policies, whose cut encoding depends on the
+    # run direction).
+    all_row = tuple(len(r) if _run_direction(blocks, r) < 0 else 0
+                    for r in runs)
+    all_frame = tuple(0 if _run_direction(blocks, r) < 0 else len(r)
+                      for r in runs)
+    starts = [all_row, all_frame, tuple(len(r) // 2 for r in runs)]
+    best = None
+    for start in starts:
+        cuts = list(start)
+        cur = evaluate(gg, blocks, runs, tuple(cuts), hw)
+        evaluated += 1
+        improved = True
+        while improved:
+            improved = False
+            for ri, run in enumerate(runs):
+                for cand_cut in range(len(run) + 1):
+                    if cand_cut == cuts[ri]:
+                        continue
+                    trial = list(cuts)
+                    trial[ri] = cand_cut
+                    c = evaluate(gg, blocks, runs, tuple(trial), hw)
+                    evaluated += 1
+                    if _key(c, objective) < _key(cur, objective):
+                        cur, cuts, improved = c, trial, True
+        if best is None or _key(cur, objective) < _key(best, objective):
+            best = cur
+    assert best is not None
+    return SearchResult(best=best, evaluated=evaluated, runs=runs,
+                        blocks=blocks)
+
+
+def sweep_single_cut(gg: GroupedGraph, hw: FPGAConfig) -> list[Candidate]:
+    """Fig. 16/17: metrics vs the position of a single global cut-point:
+    blocks < L row-reuse, >= L frame-reuse."""
+    blocks = split_blocks(gg)
+    out = []
+    for L in range(len(blocks) + 1):
+        policy: Policy = {}
+        for b in blocks:
+            mode = "row" if b.bid < L else "frame"
+            for gid in b.gids:
+                policy[gid] = mode
+        alloc = allocate(gg, policy)
+        sram = sram_report(gg, alloc, hw)
+        dram = dram_report(gg, alloc)
+        lat = latency_report(gg, alloc, hw)
+        out.append(Candidate(
+            cuts=(L,), policy=policy, alloc=alloc,
+            latency_cycles=lat.cycles, dram_total=dram.total,
+            dram_fm=dram.fm_bytes, sram_total=sram.sram_total,
+            bram18k=sram.bram18k,
+            feasible=(sram.sram_total <= hw.sram_budget
+                      and frame_feasible(gg, policy, alloc))))
+    return out

@@ -1,0 +1,90 @@
+"""Off-chip access model: paper equations (8)-(9).
+
+``dram_fm`` generalizes eq. (8) with explicit boundary terms so that
+arbitrary (non-contiguous) policies are accounted exactly; for the paper's
+contiguous segment policies it reduces to eq. (8):
+
+  row-mode conv groups:   in_size + out_size        (stream through DRAM)
+  row-mode fused shortcut: + shortcut in_size        (Fig. 9: 2 reads 1 write)
+  frame-mode groups:      0, except
+     - row->frame boundary reads (input fetched once),
+     - frame->row / final-output boundary writes,
+     - long-path spills (concat/route operands): write + read
+       == the paper's  2 x in_size(concat)  term.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.allocator import Allocation, _is_side
+from repro.core.grouping import GroupedGraph
+
+
+@dataclass
+class DRAMReport:
+    fm_bytes: int
+    weight_bytes: int
+
+    @property
+    def total(self) -> int:             # eq. (9)
+        return self.fm_bytes + self.weight_bytes
+
+    def __str__(self) -> str:
+        mb = 1 / (1 << 20)
+        return (f"DRAM fm={self.fm_bytes * mb:.2f} MB + "
+                f"w={self.weight_bytes * mb:.2f} MB = {self.total * mb:.2f} MB")
+
+
+def dram_fm(gg: GroupedGraph, alloc: Allocation) -> int:
+    policy = alloc.policy
+    fm = 0
+    for g in gg.groups:
+        if _is_side(gg, g):
+            continue                          # SE side path: on-chip always
+        mode = policy[g.gid]
+        if mode == "row":
+            if g.kind in ("concat", "route"):
+                # Feature-merging redirect (TensorRT-style, §III-A): the
+                # producers already wrote into the concat destination.
+                continue
+            sc = gg.shortcut_source_group(g)
+            sc_bytes = gg.groups[sc].out_size if sc is not None else 0
+            fm += g.in_size + g.out_size + sc_bytes
+            if g.kind == "add" and g.head.kind == "add":
+                # standalone eltwise: in+out counted; second operand:
+                extra = sum(gg.groups[i].out_size
+                            for i in gg.group_inputs(g)[1:]
+                            if i >= 0)
+                fm += extra
+        else:
+            # Reads of DRAM-resident inputs (boundaries, spills, concat
+            # gathers) are charged to the consumer via boundary_reads; the
+            # write side is charged to the producer here.
+            fm += alloc.boundary_reads.get(g.gid, 0)
+            if g.gid in alloc.boundary_writes or g.gid in alloc.spilled:
+                fm += g.out_size
+    return fm
+
+
+def dram_report(gg: GroupedGraph, alloc: Allocation) -> DRAMReport:
+    weights = sum(g.weight_size for g in gg.groups)   # read exactly once
+    return DRAMReport(fm_bytes=dram_fm(gg, alloc), weight_bytes=weights)
+
+
+def baseline_total(gg: GroupedGraph) -> int:
+    """Paper's baseline (Table V footnote): weights/inputs/outputs accessed
+    from DRAM exactly once *per layer* (node granularity -- interior tensors
+    are written by their producer and re-read by each consumer)."""
+    total = 0
+    for n in gg.graph.nodes:
+        if n.kind == "input":
+            continue
+        g = gg.groups[gg.node_group[n.idx]]
+        if _is_side(gg, g):
+            continue                        # SE side path: tiny, on-chip
+        if n.kind in ("concat", "route"):
+            continue                        # redirect, no movement
+        total += n.in_size + n.out_size + n.weight_size
+        if n.kind == "add":                 # second (shortcut) operand read
+            total += sum(gg.graph.nodes[i].out_size for i in n.inputs[1:])
+    return total

@@ -1,0 +1,128 @@
+"""Group-wise instruction generation (paper Fig. 5b).
+
+Each node group is described by an 11-word instruction (32-bit words): the
+convolution geometry, activation type, pooling/upsampling option, fused
+element-wise (shortcut) operand, data-reuse mode, and the static buffer
+allocation {alloc_in, alloc_out, alloc_shortcut} from Algorithm 1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.allocator import Allocation
+from repro.core.grouping import GroupedGraph
+
+WORDS = 11
+
+OPCODES = {"conv": 0, "dwconv": 1, "fc": 2, "add": 3, "concat": 4,
+           "route": 5, "upsample": 6, "maxpool": 7, "avgpool": 8,
+           "globalpool": 9, "scale": 10}
+ACTS = {"linear": 0, "relu": 1, "leaky": 2, "swish": 3, "sigmoid": 4}
+MODES = {"row": 0, "frame": 1}
+OFFCHIP = 3                                    # buffer id meaning DRAM
+
+
+@dataclass
+class GroupInstruction:
+    gid: int
+    opcode: int
+    mode: int
+    k: int
+    stride: int
+    in_ch: int
+    out_ch: int
+    in_h: int
+    in_w: int
+    act: int
+    fused_pool: int          # 0 none, 1 max2x2, 2 global-avg
+    fused_eltwise: int       # 0 none, 1 add
+    fused_upsample: int
+    alloc_in: int            # {0,1,2} or OFFCHIP
+    alloc_out: int
+    alloc_shortcut: int
+    src_main: int            # producer gid (-1 = network input)
+    src_shortcut: int        # producer gid of shortcut operand (-1 = none)
+
+    def encode(self) -> np.ndarray:
+        w = np.zeros(WORDS, dtype=np.uint32)
+        w[0] = (self.opcode & 0xFF) | ((self.mode & 0xF) << 8) \
+            | ((self.act & 0xF) << 12) | ((self.k & 0xFF) << 16) \
+            | ((self.stride & 0xFF) << 24)
+        w[1] = self.in_ch
+        w[2] = self.out_ch
+        w[3] = self.in_h
+        w[4] = self.in_w
+        w[5] = (self.fused_pool & 0xFF) | ((self.fused_eltwise & 0xFF) << 8) \
+            | ((self.fused_upsample & 0xFF) << 16)
+        w[6] = (self.alloc_in & 0xF) | ((self.alloc_out & 0xF) << 4) \
+            | ((self.alloc_shortcut & 0xF) << 8)
+        w[7] = np.uint32(self.src_main & 0xFFFFFFFF)
+        w[8] = np.uint32(self.src_shortcut & 0xFFFFFFFF)
+        w[9] = self.gid
+        w[10] = 0xC0FFEE                        # group terminator marker
+        return w
+
+    @classmethod
+    def decode(cls, w: np.ndarray) -> "GroupInstruction":
+        assert int(w[10]) == 0xC0FFEE, "corrupt instruction stream"
+        return cls(
+            gid=int(w[9]),
+            opcode=int(w[0]) & 0xFF, mode=(int(w[0]) >> 8) & 0xF,
+            act=(int(w[0]) >> 12) & 0xF, k=(int(w[0]) >> 16) & 0xFF,
+            stride=(int(w[0]) >> 24) & 0xFF,
+            in_ch=int(w[1]), out_ch=int(w[2]), in_h=int(w[3]), in_w=int(w[4]),
+            fused_pool=int(w[5]) & 0xFF, fused_eltwise=(int(w[5]) >> 8) & 0xFF,
+            fused_upsample=(int(w[5]) >> 16) & 0xFF,
+            alloc_in=int(w[6]) & 0xF, alloc_out=(int(w[6]) >> 4) & 0xF,
+            alloc_shortcut=(int(w[6]) >> 8) & 0xF,
+            src_main=int(np.int32(np.uint32(w[7]))),
+            src_shortcut=int(np.int32(np.uint32(w[8]))))
+
+
+def generate_instructions(gg: GroupedGraph,
+                          alloc: Allocation) -> list[GroupInstruction]:
+    ins: list[GroupInstruction] = []
+    for g in gg.groups:
+        head, tail = g.head, g.tail
+        fused_pool = 0
+        fused_elt = 0
+        fused_up = 0
+        for n in g.nodes[1:] if head.is_compute else g.nodes:
+            if n.kind == "maxpool":
+                fused_pool = 1
+            elif n.kind in ("avgpool", "globalpool"):
+                fused_pool = 2
+            elif n.kind == "add":
+                fused_elt = 1
+            elif n.kind == "upsample":
+                fused_up = n.stride
+        gin = gg.group_inputs(g)
+        sc = gg.shortcut_source_group(g)
+        ins.append(GroupInstruction(
+            gid=g.gid,
+            opcode=OPCODES[head.kind],
+            mode=MODES[alloc.policy[g.gid]],
+            k=head.k, stride=head.stride,
+            in_ch=head.in_ch, out_ch=tail.out_ch,
+            in_h=head.in_h, in_w=head.in_w,
+            act=ACTS.get(head.act, 0),
+            fused_pool=fused_pool, fused_eltwise=fused_elt,
+            fused_upsample=fused_up,
+            alloc_in=alloc.alloc_in.get(g.gid, OFFCHIP),
+            alloc_out=alloc.alloc_out.get(g.gid, OFFCHIP),
+            alloc_shortcut=alloc.alloc_shortcut.get(g.gid, OFFCHIP),
+            src_main=gin[0] if gin else -1,
+            src_shortcut=sc if sc is not None else -1))
+    return ins
+
+
+def encode_stream(instructions: list[GroupInstruction]) -> np.ndarray:
+    return np.concatenate([i.encode() for i in instructions])
+
+
+def decode_stream(stream: np.ndarray) -> list[GroupInstruction]:
+    assert stream.size % WORDS == 0
+    return [GroupInstruction.decode(stream[i:i + WORDS])
+            for i in range(0, stream.size, WORDS)]

@@ -1,0 +1,193 @@
+"""Residual-stream residency planner: ShortcutFusion for LM stacks.
+
+A transformer layer is a residual block; the residual stream is the paper's
+"shortcut data".  This module re-applies the paper's machinery on the
+HBM -> VMEM hierarchy of a TPU:
+
+  frame-reuse  -> RESIDENT mode: the block runs as a fused kernel
+                  (kernels/fused_block.py); the shortcut tile is pinned in
+                  VMEM across norm->matmul->act->matmul->add; weights are
+                  streamed HBM->VMEM exactly once; intermediate activations
+                  never touch HBM.
+  row-reuse    -> STREAMING mode: op-by-op XLA execution; every operator's
+                  inputs/outputs round-trip HBM exactly once (the paper's
+                  constraint (10) analogue -- XLA fusion is modelled by
+                  counting each *fusion group* boundary, i.e. act_bytes).
+
+Two planners are provided:
+
+  * plan_cutpoint -- paper-faithful: one cut per monotone run of per-block
+    working-set size (for homogeneous LM stacks: a single cut L; blocks
+    >= L resident).  Exhaustive O(N) sweep of the cut as in §IV-B.
+  * plan_dp       -- beyond-paper: exact dynamic program over per-block
+    modes with segment-boundary costs; a strict generalization that can
+    interleave modes (useful for MoE stacks whose expert blocks never fit).
+
+Both respect the hard VMEM budget, mirroring the SRAM constraint (*).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.hw import TPUConfig, V5E
+
+
+@dataclass(frozen=True)
+class LMBlockSpec:
+    """Per-layer(-shard) costs, all bytes/flops PER DEVICE per step."""
+    idx: int
+    kind: str                 # attn | mlp | moe | ssm | rglru | cross | embed
+    weight_bytes: int         # parameter bytes this device streams
+    stream_bytes: int         # residual-stream tensor bytes (in == out)
+    act_bytes: int            # extra HBM traffic in streaming mode
+    flops: int                # FLOPs this device executes
+    state_bytes: int = 0      # KV-cache / recurrent state traffic (HBM
+    #                           resident in either mode)
+    vmem_resident: int = 0    # VMEM needed to run resident (3 stream tiles
+    #                           + weight slabs + scratch); 0 = derive
+
+    def resident_vmem(self, hw: TPUConfig) -> int:
+        if self.vmem_resident:
+            return self.vmem_resident
+        # 3-slot allocation (Algorithm 1): x-tile, y-tile, norm scratch.
+        # Tiles are (tile_m x d); we budget 3 tiles of the stream plus a
+        # double-buffered weight slab of 2 * (d x lane) columns + fp32 accum.
+        tile = min(self.stream_bytes, 4 << 20)
+        slab = 2 * max(1, self.weight_bytes // 64)
+        slab = min(slab, 32 << 20)
+        return 3 * tile + slab + (4 << 20)
+
+
+@dataclass
+class ResidencyPlan:
+    modes: list[str]                       # 'resident' | 'streaming'
+    hbm_bytes: int
+    vmem_peak: int
+    est_seconds: float
+    cut: int | None = None                 # for the cut-point planner
+    per_block: list[dict] = field(default_factory=list)
+
+    @property
+    def n_resident(self) -> int:
+        return sum(m == "resident" for m in self.modes)
+
+    def summary(self) -> str:
+        gb = 1 / (1 << 30)
+        return (f"{self.n_resident}/{len(self.modes)} blocks resident, "
+                f"HBM {self.hbm_bytes * gb:.3f} GB/step/device, "
+                f"VMEM peak {self.vmem_peak / (1 << 20):.1f} MB, "
+                f"est {1e3 * self.est_seconds:.3f} ms/step")
+
+
+def _block_cost(b: LMBlockSpec, mode: str, hw: TPUConfig,
+                boundary_bytes: int = 0) -> tuple[int, float]:
+    """(hbm_bytes, seconds) for one block in one mode.  Segment-boundary
+    stream movement folds under the roofline max (it overlaps compute,
+    like every other HBM transfer).  The returned time carries an
+    infinitesimal traffic tie-break so compute-bound blocks still prefer
+    the lower-HBM mode (the paper's DRAM-access constraint under equal
+    latency)."""
+    if mode == "resident":
+        hbm = b.weight_bytes + b.state_bytes
+    else:
+        hbm = b.weight_bytes + b.state_bytes + b.act_bytes + 2 * b.stream_bytes
+    hbm += boundary_bytes
+    t = max(b.flops / hw.peak_flops, hbm / hw.hbm_bw)
+    return hbm, t
+
+
+def _evaluate(blocks: list[LMBlockSpec], modes: list[str],
+              hw: TPUConfig, vmem_budget: int) -> ResidencyPlan:
+    hbm = 0
+    t = 0.0
+    vmem_peak = 0
+    per_block = []
+    prev = "streaming"
+    for b, m in zip(blocks, modes):
+        # boundary stream movement charged to the block where the mode
+        # changes (resident entry reads the stream; a streaming successor
+        # of a resident segment pays the segment's exit write)
+        boundary = b.stream_bytes if m != prev else 0
+        bb, bt = _block_cost(b, m, hw, boundary)
+        if m == "resident":
+            vmem_peak = max(vmem_peak, b.resident_vmem(hw))
+        hbm += bb
+        t += bt
+        per_block.append({"idx": b.idx, "kind": b.kind, "mode": m,
+                          "hbm": bb, "sec": bt})
+        prev = m
+    if prev == "resident":                  # trailing segment exit write
+        xb = blocks[-1].stream_bytes
+        hbm += xb
+        t += xb / hw.hbm_bw
+    return ResidencyPlan(modes=list(modes), hbm_bytes=hbm,
+                         vmem_peak=vmem_peak, est_seconds=t,
+                         per_block=per_block)
+
+
+def _fits(b: LMBlockSpec, hw: TPUConfig, vmem_budget: int) -> bool:
+    return b.resident_vmem(hw) <= vmem_budget
+
+
+def plan_cutpoint(blocks: list[LMBlockSpec], hw: TPUConfig = V5E,
+                  vmem_budget: int | None = None) -> ResidencyPlan:
+    """Paper-faithful single-cut policy: blocks >= L resident (provided
+    they fit VMEM); exhaustive sweep of L (Fig. 16/17 analogue)."""
+    vmem_budget = vmem_budget or hw.vmem_bytes
+    best: ResidencyPlan | None = None
+    n = len(blocks)
+    for cut in range(n + 1):
+        modes = []
+        for i, b in enumerate(blocks):
+            m = "resident" if (i >= cut and _fits(b, hw, vmem_budget)) \
+                else "streaming"
+            modes.append(m)
+        plan = _evaluate(blocks, modes, hw, vmem_budget)
+        plan.cut = cut
+        if plan.vmem_peak > vmem_budget:
+            continue
+        if best is None or (plan.est_seconds, plan.hbm_bytes) < \
+                (best.est_seconds, best.hbm_bytes):
+            best = plan
+    assert best is not None
+    return best
+
+
+def plan_dp(blocks: list[LMBlockSpec], hw: TPUConfig = V5E,
+            vmem_budget: int | None = None) -> ResidencyPlan:
+    """Beyond-paper exact DP: argmin over per-block modes of total time
+    with boundary costs (states: mode of the previous block)."""
+    vmem_budget = vmem_budget or hw.vmem_bytes
+    INF = (float("inf"), float("inf"))
+    # dp[mode] = ((seconds, hbm_bytes), path): lexicographic cost --
+    # minimize time, tie-break on traffic (the paper's DRAM constraint)
+    dp = {"streaming": ((0.0, 0), []), "resident": (INF, [])}
+    for b in blocks:
+        nxt = {"streaming": (INF, []), "resident": (INF, [])}
+        for m in ("streaming", "resident"):
+            if m == "resident" and not _fits(b, hw, vmem_budget):
+                continue
+            for pm in ("streaming", "resident"):
+                c0, path = dp[pm]
+                if c0 == INF:
+                    continue
+                boundary = b.stream_bytes if pm != m else 0
+                bb, bt = _block_cost(b, m, hw, boundary)
+                cost = (c0[0] + bt, c0[1] + bb)
+                if cost < nxt[m][0]:
+                    nxt[m] = (cost, path + [m])
+        dp = nxt
+    # exit cost for trailing resident segment
+    if dp["resident"][0] != INF:
+        xb = blocks[-1].stream_bytes
+        c = dp["resident"][0]
+        dp["resident"] = ((c[0] + xb / hw.hbm_bw, c[1] + xb),
+                          dp["resident"][1])
+    mode = min(dp, key=lambda k: dp[k][0])
+    modes = dp[mode][1]
+    return _evaluate(blocks, modes, hw, vmem_budget)
+
+
+def streaming_baseline(blocks: list[LMBlockSpec],
+                       hw: TPUConfig = V5E) -> ResidencyPlan:
+    return _evaluate(blocks, ["streaming"] * len(blocks), hw, hw.vmem_bytes)

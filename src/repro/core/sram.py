@@ -1,0 +1,93 @@
+"""On-chip buffer sizing: paper equations (1)-(7)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.allocator import Allocation
+from repro.core.grouping import GroupedGraph
+from repro.core.hw import FPGAConfig
+
+
+@dataclass
+class SRAMReport:
+    weight_buff: int
+    row_buff: int
+    out_buff: int
+    write_buff: int
+    buff: list[int]
+    side_buff: int
+    sram_total: int
+    bram18k: int
+
+    def __str__(self) -> str:
+        mb = 1 / (1 << 20)
+        return (f"SRAM {self.sram_total * mb:.3f} MB "
+                f"(w={self.weight_buff * mb:.3f} row={self.row_buff * mb:.3f} "
+                f"out={self.out_buff * mb:.3f} wr={self.write_buff * mb:.3f} "
+                f"buf={[round(b * mb, 3) for b in self.buff]} "
+                f"side={self.side_buff * mb:.3f}) bram18k={self.bram18k}")
+
+
+def bram18k_count(depth: int, width_bits: int) -> int:
+    """Eq. (7): BRAM18k = ceil(depth/1024) * ceil(width/18)."""
+    if depth == 0:
+        return 0
+    return math.ceil(depth / 1024) * math.ceil(width_bits / 18)
+
+
+def sram_report(gg: GroupedGraph, alloc: Allocation,
+                hw: FPGAConfig) -> SRAMReport:
+    policy = alloc.policy
+    compute = [g for g in gg.groups if g.is_compute or g.kind == "scale"]
+
+    # Eq. (1): in row-reuse mode the entire layer weights are pre-loaded
+    # on-chip (constraint (10): weights from DRAM exactly once).
+    weight_buff = max((g.weight_size for g in compute
+                       if policy[g.gid] == "row"), default=0)
+
+    # Eq. (2): buffer 1 is shared between feature maps and weights.
+    buff = list(alloc.buff)
+    buff[1] = max(buff[1], weight_buff)
+
+    # Eq. (3): six rows of the widest input (incl. one prefetch row).
+    row_buff = max((6 * g.head.in_w * g.head.in_ch * g.head.qa
+                    for g in compute), default=0)
+
+    # Eq. (4): partial-sum buffer, 4-byte accumulators; frame mode buffers a
+    # whole To-channel frame, row mode only one row (frame dominates).
+    out_frame = max((g.head.out_w * g.head.out_h * hw.to * g.head.qs
+                     for g in compute if policy[g.gid] == "frame"), default=0)
+    out_row = max((g.head.out_w * hw.to * g.head.qs
+                   for g in compute if policy[g.gid] == "row"), default=0)
+    out_buff = max(out_frame, out_row)
+
+    # Eq. (5): write buffer.
+    wr_row = max((g.tail.out_w * hw.to * g.tail.qa
+                  for g in compute if policy[g.gid] == "row"), default=0)
+    wr_frame = max((g.tail.out_w * g.tail.out_h * hw.to * g.tail.qa
+                    for g in compute
+                    if policy[g.gid] == "frame"
+                    and g.gid in alloc.boundary_writes), default=0)
+    write_buff = max(wr_row, wr_frame)
+
+    # Eq. (6).
+    sram_total = (row_buff + out_buff + write_buff
+                  + sum(buff) + alloc.side_buff)
+
+    # Eq. (7) applied per physical buffer, To banks of 8-bit (x2 for the
+    # double-INT8 weight feed), 32-bit for partial sums.
+    def brams(total_bytes: int, width_bits: int) -> int:
+        if total_bytes == 0:
+            return 0
+        banks = hw.to
+        depth = math.ceil(total_bytes * 8 / (banks * width_bits))
+        return banks * bram18k_count(depth, width_bits)
+
+    bram = (brams(row_buff, 8) + brams(out_buff, 32) + brams(write_buff, 8)
+            + sum(brams(b, 8) for b in buff) + brams(alloc.side_buff, 8))
+
+    return SRAMReport(weight_buff=weight_buff, row_buff=row_buff,
+                      out_buff=out_buff, write_buff=write_buff, buff=buff,
+                      side_buff=alloc.side_buff, sram_total=sram_total,
+                      bram18k=bram)

@@ -1,0 +1,110 @@
+"""Cycle-accurate-style latency model (paper §IV-B, Fig. 3).
+
+The paper validates a cycle-accurate simulator against RTL; we model the
+same pipeline structure analytically per group:
+
+row-based weight reuse (Fig. 3b):
+    the layer's full weights are pre-loaded on-chip (constraint (10)), then
+    rows stream: compute overlaps feature-map DRAM traffic.
+      latency = weight_load + max(compute_cycles, fm_dram_cycles)
+
+frame-based weight reuse (Fig. 3a):
+    feature maps resident on-chip; weight-block loads are hidden by the
+    computation of the previous sub-frame ("the latency of reading the
+    weight blocks ... can be hidden by the computation"):
+      latency = max(compute_cycles, weight_dram_cycles + boundary_io_cycles)
+
+Post-processing nodes fused into the group (pool / eltwise / upsample /
+scale) ride the output chain and add no cycles (§III-B-2: "the element-wise
+layer does not incur an additional timing overhead").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.allocator import Allocation, _is_side
+from repro.core.grouping import Group, GroupedGraph
+from repro.core.hw import FPGAConfig
+
+
+@dataclass
+class LatencyReport:
+    cycles: float
+    per_group: dict[int, float] = field(default_factory=dict)
+
+    def seconds(self, hw: FPGAConfig) -> float:
+        return self.cycles / hw.freq
+
+    def ms(self, hw: FPGAConfig) -> float:
+        return 1e3 * self.seconds(hw)
+
+
+def compute_cycles(g: Group, hw: FPGAConfig) -> float:
+    """MAC-array occupancy with lane-granularity effects.
+
+    Normal conv / fc: the shared array performs a Ti x To MAC step per
+    cycle, so cycles = out_h*out_w*k^2 * ceil(Cin/Ti) * ceil(Cout/To); layers
+    with few channels waste lanes (this is what drives the paper's 19.4%
+    MAC efficiency on EfficientNet vs ~71% on ResNet152).
+    Depthwise / SE-scale: single-mult path (Fig. 7b, 8a): one <=32-MAC
+    kernel per array per cycle => To outputs/cycle."""
+    import math
+    cyc = 0.0
+    for n in g.nodes:
+        if n.macs == 0:
+            continue
+        if n.kind in ("dwconv", "scale"):
+            kernel_passes = max(1, math.ceil(n.k * n.k / 32))
+            cyc += (n.out_h * n.out_w * math.ceil(n.out_ch / hw.to)
+                    * kernel_passes)
+        else:
+            cyc += (n.out_h * n.out_w * n.k * n.k
+                    * math.ceil((n.in_ch / n.groups) / hw.ti)
+                    * math.ceil(n.out_ch / hw.to))
+    return cyc
+
+
+def group_latency(gg: GroupedGraph, g: Group, alloc: Allocation,
+                  hw: FPGAConfig) -> float:
+    policy = alloc.policy
+    if _is_side(gg, g):
+        # SE side path: a handful of MACs + pooling, fully hidden behind the
+        # main path in hardware; charge only its compute.
+        return compute_cycles(g, hw)
+
+    bpc = hw.dram_bytes_per_cycle
+    mode = policy[g.gid]
+    comp = compute_cycles(g, hw)
+
+    if mode == "row":
+        if g.kind in ("concat", "route"):
+            return hw.group_overhead_cycles          # redirect: free
+        sc = gg.shortcut_source_group(g)
+        sc_bytes = gg.groups[sc].out_size if sc is not None else 0
+        extra_in = 0
+        if g.head.kind == "add":
+            extra_in = sum(gg.groups[i].out_size
+                           for i in gg.group_inputs(g)[1:] if i >= 0)
+        fm_bytes = g.in_size + g.out_size + sc_bytes + extra_in
+        weight_load = g.weight_size / bpc
+        return weight_load + max(comp, fm_bytes / bpc) + hw.group_overhead_cycles
+
+    # frame mode
+    io_bytes = alloc.boundary_reads.get(g.gid, 0)
+    if g.gid in alloc.boundary_writes or g.gid in alloc.spilled:
+        io_bytes += g.out_size
+    mem = (g.weight_size + io_bytes) / bpc
+    return max(comp, mem) + hw.group_overhead_cycles
+
+
+def latency_report(gg: GroupedGraph, alloc: Allocation,
+                   hw: FPGAConfig) -> LatencyReport:
+    per_group = {g.gid: group_latency(gg, g, alloc, hw) for g in gg.groups}
+    return LatencyReport(cycles=sum(per_group.values()), per_group=per_group)
+
+
+def gops(gg: GroupedGraph, alloc: Allocation, hw: FPGAConfig) -> float:
+    """Achieved GOPS (2 ops per MAC) for DSP/MAC-efficiency reporting."""
+    total_ops = 2 * gg.graph.total_macs()
+    rep = latency_report(gg, alloc, hw)
+    return total_ops / rep.seconds(hw) / 1e9

@@ -1,0 +1,41 @@
+"""Public kernel entry points: dispatch Pallas on TPU, interpret elsewhere.
+
+These are what the resident-mode execution path calls; the streaming path
+uses the plain XLA implementations in models/*.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_block import fused_block as _fused_block
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+_FORCE_INTERPRET: bool | None = None
+
+
+def set_interpret(value: bool | None) -> None:
+    """Override interpret mode (None = auto by platform)."""
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = value
+
+
+def _interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+def fused_block(x, scale, w_gate, w_up, w_down, post_scale=None, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _fused_block(x, scale, w_gate, w_up, w_down, post_scale, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flash(q, k, v, **kw)
+
+
+def ssd_scan(x, dt, A, D, Bm, Cm, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _ssd(x, dt, A, D, Bm, Cm, **kw)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_block_ref(x, scale, w_gate, w_up, w_down, post_scale=None, *,
+                    act: str = "silu", gated: bool = True,
+                    sandwich: bool = False, eps: float = 1e-6):
+    def norm(v, s):
+        v32 = v.astype(jnp.float32)
+        var = jnp.mean(jnp.square(v32), axis=-1, keepdims=True)
+        return v32 * jax.lax.rsqrt(var + eps) * (1 + s.astype(jnp.float32))
+
+    n = norm(x, scale).astype(x.dtype)
+    u = jnp.dot(n, w_up, preferred_element_type=jnp.float32)
+    if gated:
+        g = jnp.dot(n, w_gate, preferred_element_type=jnp.float32)
+        g = g * jax.nn.sigmoid(g) if act == "silu" \
+            else jax.nn.gelu(g, approximate=True)
+        h = g * u
+    else:
+        h = u * jax.nn.sigmoid(u) if act == "silu" \
+            else jax.nn.gelu(u, approximate=True)
+    y = jnp.dot(h.astype(x.dtype), w_down,
+                preferred_element_type=jnp.float32)
+    if sandwich:
+        y = norm(y, post_scale)
+    return (x.astype(jnp.float32) + y).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    B, S, NH, hd = q.shape
+    _, T, NKV, _ = k.shape
+    G = NH // NKV
+    qr = q.reshape(B, S, NKV, G, hd)
+    s = jnp.einsum("bsngh,btnh->bngst", qr, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    delta = jnp.arange(S)[:, None] - jnp.arange(T)[None, :]
+    mask = jnp.ones_like(delta, dtype=bool)
+    if causal:
+        mask &= delta >= 0
+    if window:
+        mask &= delta < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngst,btnh->bsngh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, NH, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, D, Bm, Cm):
+    """Sequential (non-chunked) SSD recurrence; fp32.
+    x [BH,S,P]; dt [BH,S]; A,D [BH,1]; Bm,Cm [BG,S,N]."""
+    BH, S, P = x.shape
+    BG, _, N = Bm.shape
+    hg = BH // BG
+    Bh = jnp.repeat(Bm, hg, axis=0)
+    Ch = jnp.repeat(Cm, hg, axis=0)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                 # [BH,P], [BH], [BH,N] x2
+        dA = jnp.exp(dtt * A[:, 0])           # [BH]
+        xdt = xt * dtt[:, None]
+        state = state * dA[:, None, None] + \
+            jnp.einsum("hp,hn->hpn", xdt, bt)
+        y = jnp.einsum("hpn,hn->hp", state, ct) + xt * D
+        return state, y
+
+    inputs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+              Bh.swapaxes(0, 1), Ch.swapaxes(0, 1))
+    state0 = jnp.zeros((BH, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, state0,
+        jax.tree.map(lambda t: t.astype(jnp.float32), inputs))
+    return ys.swapaxes(0, 1).astype(x.dtype)

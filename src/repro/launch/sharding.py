@@ -1,0 +1,178 @@
+"""Per-architecture sharding plans: logical-axis -> mesh-axis rules plus
+batch placement, derived from divisibility against the production mesh.
+
+Parallelism map (DP/FSDP/TP/EP):
+  TP plan (default): heads/kv/ff/vocab -> 'model' where the dimension
+    divides the axis; experts -> 'model' (EP); batch -> ('pod','data');
+    'embed' -> 'data' (FSDP) when a replicated copy would not fit.
+  DP plan (small models / head counts indivisible by the model axis, e.g.
+    smollm's 15 heads): batch additionally spreads over 'model', all
+    activations replicated nowhere, params FSDP-sharded over 'model'.
+
+The 'pod' axis always carries pure data parallelism: only gradient
+all-reduces cross the inter-pod links.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FSDP_THRESHOLD_BYTES = 1.5e9     # replicated fp32 params per model-shard
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    kind: str                     # 'tp' | 'dp'
+    rules: dict
+    batch_axis_pref: tuple        # candidate batch axis tuples, best first
+    fsdp: bool
+
+    def batch_spec(self, mesh, global_batch: int) -> P:
+        avail = set(mesh.axis_names)
+        for cand in self.batch_axis_pref:
+            axes = tuple(a for a in cand if a in avail)
+            if not axes:
+                continue
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if global_batch % n == 0:
+                return P(axes if len(axes) > 1 else axes[0])
+        return P()
+
+
+def _div(n: int, k: int) -> bool:
+    return n > 0 and n % k == 0
+
+
+def make_plan(cfg: ModelConfig, mesh) -> ShardingPlan:
+    model_n = mesh.shape.get("model", 1)
+    heads_ok = _div(cfg.n_heads, model_n)
+    attn_free = cfg.family == "ssm"
+    param_bytes = cfg.param_count() * 4
+
+    if not heads_ok and not attn_free:
+        # HYBRID plan: attention cannot be head-sharded (8/10/15 heads on
+        # a 16-way axis), but the MLP can still run Megatron ff-TP (d_ff
+        # divides for every assigned arch) and the vocab shards for the
+        # chunked cross-entropy.  Attention runs batch-parallel
+        # (replicated over 'model'); the opt-in CP path
+        # (attention.cp_attention) spreads prefill attention over the
+        # model axis too.  An earlier pure-DP variant stored params
+        # FSDP-style on the *contracting* dim, which made GSPMD all-reduce
+        # the [B,S,d_ff] MLP intermediates (4.6 GiB/layer) instead of
+        # gathering 40 MB of weights -- see EXPERIMENTS.md §Perf 2e.
+        rules = {"embed": None,
+                 "vocab": "model" if _div(cfg.vocab, model_n) else None,
+                 "heads": None, "kv": None,
+                 "ff": "model" if _div(cfg.d_ff, model_n) else None,
+                 "experts": None, "layers": None, None: None}
+        return ShardingPlan(
+            kind="hybrid", rules=rules,
+            batch_axis_pref=(("pod", "data"), ("data",), ()),
+            fsdp=False)
+
+    fsdp = param_bytes / model_n > FSDP_THRESHOLD_BYTES
+    rules = {
+        "vocab": "model" if _div(cfg.vocab, model_n) else None,
+        "heads": "model" if heads_ok or attn_free else None,
+        "kv": "model" if _div(cfg.n_kv_heads, model_n) else None,
+        "ff": "model",
+        "experts": "model" if _div(cfg.n_experts, model_n) else None,
+        "embed": "data" if fsdp else None,
+        "layers": None,
+        None: None,
+    }
+    return ShardingPlan(
+        kind="tp", rules=rules,
+        batch_axis_pref=(("pod", "data"), ("data",), ()),
+        fsdp=fsdp)
+
+
+def needs_fsdp(cfg: ModelConfig, mesh) -> bool:
+    return make_plan(cfg, mesh).fsdp
+
+
+def param_pspecs(model, mesh, plan: ShardingPlan | None = None):
+    plan = plan or make_plan(model.cfg, mesh)
+    return model.pspecs(plan.rules)
+
+
+def batch_pspecs(model, mesh, batch_spec: dict, global_batch: int,
+                 plan: ShardingPlan | None = None) -> dict:
+    plan = plan or make_plan(model.cfg, mesh)
+    bp = plan.batch_spec(mesh, global_batch)
+    out = {}
+    for k, v in batch_spec.items():
+        out[k] = P(*bp, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def cache_pspecs(cache_tree, mesh, global_batch: int,
+                 plan: ShardingPlan) -> dict:
+    """PartitionSpecs for a decode cache pytree, keyed by leaf names."""
+    bp = plan.batch_spec(mesh, global_batch)
+    b = tuple(bp)[0] if len(bp) else None
+    kv_ax = plan.rules.get("kv")
+    ff_ax = plan.rules.get("ff")
+    head_ax = plan.rules.get("heads")
+
+    def one(path, leaf):
+        name = None
+        stacked = False
+        for p in path:
+            if hasattr(p, "key"):
+                if p.key == "groups":
+                    stacked = True          # leading n_groups 'layers' dim
+                name = p.key
+        nd = len(leaf.shape)
+        # When kv heads cannot shard on the model axis, shard the cache's
+        # sequence dim instead (context-parallel cache): qwen3's 48 GiB/dev
+        # decode cache drops to 3 GiB (EXPERIMENTS.md §Perf).  Skip when
+        # the batch spec already consumes the model axis (dp plan with
+        # batch spread over data x model) or the seq length does not
+        # divide (whisper's 1500-frame cross KV).
+        b_axes = set(b) if isinstance(b, tuple) else ({b} if b else set())
+        model_n = mesh.shape.get("model", 1)
+        seq_len = leaf.shape[2] if nd >= 4 and name in (
+            "k", "v", "ck", "cv") and nd == 5 else (
+            leaf.shape[1] if nd >= 2 else 0)
+        seq_ax = "model" if (kv_ax is None and "model" not in b_axes
+                             and seq_len % model_n == 0) else None
+        base = {"k": (b, seq_ax, kv_ax, None),
+                "v": (b, seq_ax, kv_ax, None),
+                "ck": (b, seq_ax, kv_ax, None),
+                "cv": (b, seq_ax, kv_ax, None),
+                "convx": (b, None, ff_ax),
+                "convbc": (b, None, ff_ax),
+                "conv": (b, None, ff_ax),
+                "ssd": (b, ff_ax, None, None),
+                "h": (b, ff_ax)}.get(name)
+        if base is None:
+            return P(*([None] * nd))              # pos etc.
+        if stacked and nd == len(base) + 1:
+            return P(None, *base)
+        assert nd == len(base), (name, leaf.shape)
+        return P(*base)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def to_named(mesh, spec_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def hidden_batch_axes(plan: ShardingPlan, mesh,
+                      global_batch: int) -> tuple | None:
+    bp = plan.batch_spec(mesh, global_batch)
+    if len(bp) == 0:
+        return None
+    ax = tuple(bp)[0]
+    return ax if isinstance(ax, tuple) else (ax,)

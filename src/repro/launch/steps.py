@@ -1,0 +1,44 @@
+"""jit-able train / prefill / decode step builders shared by the drivers
+(train.py, serve.py) and the multi-pod dry-run."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, remat: str = "full"):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, remat=remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        return new_params, new_state, {"loss": loss, **metrics,
+                                       **opt_metrics}
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def serve_step(params, cache, tokens):
+        """One new token per sequence against the standing KV cache."""
+        logits, new_cache = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_cache
+    return serve_step
+
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "AdamWConfig", "init_opt_state"]

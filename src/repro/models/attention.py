@@ -1,0 +1,206 @@
+"""Blocked (flash-style) attention in pure JAX.
+
+Online-softmax over KV chunks via lax.scan: the full score matrix is never
+materialized, so 32k-token prefill lowers with bounded memory on every mesh.
+Supports GQA, causal masking, sliding-window (local) masking, gemma-2 logit
+soft-capping and offset query positions (decode / chunked prefill).
+
+kernels/flash_attention.py is the Pallas TPU twin of this function and is
+validated against it (tests/test_kernels_flash.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_size(t: int) -> int:
+    for c in (512, 256, 128, 64, 32, 16, 8):
+        if t % c == 0:
+            return c
+    return t
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap_val"))
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, q_offset: jax.Array | int = 0,
+                      causal: bool = True, window: int = 0,
+                      softcap_val: float = 0.0,
+                      kv_len: jax.Array | None = None,
+                      k_positions: jax.Array | None = None) -> jax.Array:
+    """q [B,S,NH,hd]; k,v [B,T,NKV,hd] -> [B,S,NH,hd].
+
+    q_offset: absolute position of q[0] (queries are positions
+    q_offset..q_offset+S-1).
+    k_positions: absolute position per key slot [T] (ring caches); default
+    arange(T).  Invalid slots carry a huge positive position so the causal
+    mask drops them.
+    window > 0: only keys with 0 <= q_pos - k_pos < window attend.
+    kv_len: number of valid cache entries (linear caches).
+    """
+    B, S, NH, hd = q.shape
+    _, T, NKV, _ = k.shape
+    G = NH // NKV
+    qr = q.reshape(B, S, NKV, G, hd).transpose(0, 2, 3, 1, 4)  # B,NKV,G,S,hd
+    kr = k.transpose(0, 2, 1, 3)                                # B,NKV,T,hd
+    vr = v.transpose(0, 2, 1, 3)
+    scale = hd ** -0.5
+    C = _chunk_size(T)
+    n_chunks = T // C
+
+    q_pos = q_offset + jnp.arange(S)                            # [S]
+    kp_all = (jnp.arange(T) if k_positions is None
+              else k_positions)
+
+    def step(carry, chunk_idx):
+        m, l, acc = carry
+        start = chunk_idx * C
+        kc = jax.lax.dynamic_slice_in_dim(kr, start, C, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(vr, start, C, axis=2)
+        s = jnp.einsum("bngsh,bnth->bngst", qr, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap_val:
+            s = softcap_val * jnp.tanh(s / softcap_val)
+        k_pos = jax.lax.dynamic_slice_in_dim(kp_all, start, C, axis=0)
+        delta = q_pos[:, None] - k_pos[None, :]                 # [S,C]
+        mask = jnp.ones_like(delta, dtype=bool)
+        if causal:
+            mask &= delta >= 0
+        if window:
+            mask &= delta < window
+        if kv_len is not None:
+            mask &= ((start + jnp.arange(C)) < kv_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bngst,bnth->bngsh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, NKV, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, NKV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, NKV, G, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, NH, hd).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap_val"))
+def plain_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, q_offset: jax.Array | int = 0,
+                    causal: bool = True, window: int = 0,
+                    softcap_val: float = 0.0,
+                    kv_len: jax.Array | None = None) -> jax.Array:
+    """Reference attention materializing the score matrix.
+
+    Used on (a) the TRAINING path -- under layer-granular remat its
+    [B,H,S,S] scores live only inside one layer's recompute, whereas
+    differentiating the blocked scan would save O(S^2) carries per chunk
+    (flash-style custom VJP is the perf-iteration upgrade) -- and (b) the
+    S==1 DECODE path against sequence-sharded caches: the score einsum
+    contracts the sharded T dim, so XLA keeps the KV cache distributed and
+    reduces [B,H,1] partials instead of gathering the cache (the blocked
+    scan's dynamic slices would re-gather it chunk by chunk)."""
+    B, S, NH, hd = q.shape
+    _, T, NKV, _ = k.shape
+    G = NH // NKV
+    qr = q.reshape(B, S, NKV, G, hd)
+    s = jnp.einsum("bsngh,btnh->bngst", qr, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    delta = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.ones_like(delta, dtype=bool)
+    if causal:
+        mask &= delta >= 0
+    if window:
+        mask &= delta < window
+    if kv_len is not None:
+        mask &= (k_pos < kv_len)[None, :]
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, NH, hd).astype(q.dtype)
+
+
+def cp_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 mesh, batch_axes, model_axis: str,
+                 causal: bool = True, window: int = 0,
+                 softcap_val: float = 0.0) -> jax.Array:
+    """Context-parallel full-sequence attention (prefill path).
+
+    Under the DP sharding plan (head count indivisible by the model axis)
+    q/k/v are replicated across the model axis.  Each model rank computes
+    the blocked attention for its 1/n query slice (k/v already local --
+    zero gather), and the outputs are all-gathered back: the model axis
+    contributes compute instead of sitting storage-only.
+    EXPERIMENTS.md §Perf iteration 2e."""
+    from jax.sharding import PartitionSpec as P
+    B, S, NH, hd = q.shape
+    n = mesh.shape[model_axis]
+    chunk = S // n
+
+    def local(ql, kl, vl):
+        i = jax.lax.axis_index(model_axis)
+        qs = jax.lax.dynamic_slice_in_dim(ql, i * chunk, chunk, 1)
+        out = blocked_attention(qs, kl, vl, q_offset=i * chunk,
+                                causal=causal, window=window,
+                                softcap_val=softcap_val)
+        return jax.lax.all_gather(out, model_axis, axis=1, tiled=True)
+
+    bspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
+              None, None, None)
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(bspec, bspec, bspec),
+                       out_specs=bspec, check_vma=False)
+    return fn(q, k, v)
+
+
+# ----------------------------------------------------------------- KV cache
+def init_kv_cache(batch: int, max_len: int, n_kv: int, hd: int,
+                  dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+    }
+
+
+def cache_update(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, ring: bool = False) -> dict:
+    """Insert S_new entries at position ``pos`` (ring buffer when the cache
+    holds only a sliding window).  If more new entries arrive than the ring
+    holds, only the trailing window is written (earlier ones would be
+    overwritten anyway)."""
+    max_len = cache["k"].shape[1]
+    s_new = k_new.shape[1]
+    if s_new > max_len:                      # static shapes
+        k_new = k_new[:, -max_len:]
+        v_new = v_new[:, -max_len:]
+        pos = pos + (s_new - max_len)
+        s_new = max_len
+    if ring:
+        idx = (pos + jnp.arange(s_new)) % max_len
+    else:
+        idx = pos + jnp.arange(s_new)
+    k = cache["k"].at[:, idx].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[:, idx].set(v_new.astype(cache["v"].dtype))
+    return {"k": k, "v": v}
+
+
+def ring_positions(pos: jax.Array, max_len: int) -> jax.Array:
+    """Absolute position held by each slot of a ring cache of size
+    ``max_len`` after ``pos`` tokens (positions 0..pos-1) were written:
+    slot s holds p = (pos-1) - ((pos-1-s) mod max_len); p < 0 means the
+    slot is empty and is pushed to +inf so the causal mask drops it."""
+    slot = jnp.arange(max_len)
+    p = (pos - 1) - ((pos - 1 - slot) % max_len)
+    return jnp.where(p >= 0, p, 10**9)

@@ -1,0 +1,222 @@
+"""Parameter definitions and core layer math (pure JAX, framework-free).
+
+Every parameter is declared once as a :class:`ParamDef` carrying its shape,
+dtype, initializer and *logical axis names*; from the same definition tree we
+derive (a) materialized params for smoke tests/examples, (b) abstract
+ShapeDtypeStructs for the multi-pod dry-run, and (c) PartitionSpecs through
+the per-arch logical->mesh rules in launch/sharding.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------- ParamDef
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis per dim
+    dtype: str = "float32"
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float = 0.0                    # 0 -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def D(shape, axes, init="normal", scale=0.0, dtype="float32") -> ParamDef:
+    return ParamDef(tuple(shape), tuple(axes), dtype, init, scale)
+
+
+def materialize(defs, rng: jax.Array, dtype_override: str | None = None):
+    """ParamDef tree -> array tree (deterministic per-leaf fold-in)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    out = []
+    for i, d in enumerate(leaves):
+        key = jax.random.fold_in(rng, i)
+        dt = jnp.dtype(dtype_override or d.dtype)
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dt)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dt)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else max(1, d.shape[-1])
+            scale = d.scale or (1.0 / np.sqrt(fan_in))
+            arr = (scale * jax.random.truncated_normal(
+                key, -2.0, 2.0, d.shape, jnp.float32)).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(defs, dtype_override: str | None = None):
+    """ParamDef tree -> ShapeDtypeStruct tree (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape,
+                                       jnp.dtype(dtype_override or d.dtype)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def partition_specs(defs, rules: dict[str | None, str | None]):
+    """ParamDef tree -> PartitionSpec tree via logical->mesh axis rules.
+
+    A logical axis missing from ``rules`` is replicated.  Two logical axes
+    mapping to the same mesh axis would be illegal; rules authors must keep
+    them distinct per tensor (validated here)."""
+    from jax.sharding import PartitionSpec as P
+
+    def one(d: ParamDef):
+        mesh_axes = []
+        used: set = set()
+        for ax in d.axes:
+            m = rules.get(ax)
+            if m is not None and m in used:
+                m = None                      # avoid double-mapping
+            if m is not None:
+                if isinstance(m, tuple):
+                    used.update(m)
+                else:
+                    used.add(m)
+            mesh_axes.append(m)
+        return P(*mesh_axes)
+
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# -------------------------------------------------------------- grad fence
+@jax.custom_vjp
+def grad_fence(x):
+    """Identity forward; backward casts the cotangent to the primal dtype.
+
+    Attention computes scores/softmax in fp32 (as it must), so without a
+    fence the cotangents leaving its backward are fp32 and every TP dx
+    all-reduce moves twice the bytes.  Production flash kernels emit bf16
+    dq/dk/dv; this reproduces that contract for the XLA path."""
+    return x
+
+
+def _fence_fwd(x):
+    return x, jnp.zeros((), x.dtype)
+
+
+def _fence_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+grad_fence.defvjp(_fence_fwd, _fence_bwd)
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [*, S] -> (sin, cos) each [*, S, head_dim/2], fp32."""
+    freq = theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                     / (head_dim // 2))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., S, H, hd]; sin/cos [..., S, hd/2] broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    s, c = sin[..., None, :], cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+# ------------------------------------------------------------- activations
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return partial(jax.nn.gelu, approximate=True)
+    raise ValueError(name)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------- embedding
+def embed_defs(cfg) -> dict:
+    # std 1/sqrt(d): input scaling by sqrt(d) then yields unit-RMS inputs
+    # and unit-scale tied-unembed logits.
+    d = {"tok": D((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                  scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        d["head"] = D((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return d
+
+
+def embed_lookup(embed: dict, tokens: jax.Array, cfg) -> jax.Array:
+    x = jnp.take(embed["tok"], tokens, axis=0)
+    # gemma-style sqrt(d) scaling keeps tied heads sane
+    return (x * np.sqrt(cfg.d_model)).astype(jnp.dtype(cfg.dtype))
+
+
+def unembed(embed: dict, x: jax.Array, cfg) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, embed["tok"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, embed["head"].astype(x.dtype))
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+# --------------------------------------------------------------------- MLP
+def mlp_defs(cfg) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    out = {
+        "pre_norm": D((d,), ("embed",), init="zeros"),
+        "w_up": D((d, ff), ("embed", "ff")),
+        "w_down": D((ff, d), ("ff", "embed")),
+    }
+    if cfg.mlp_gated:
+        out["w_gate"] = D((d, ff), ("embed", "ff"))
+    if cfg.sandwich_norm:
+        out["post_norm"] = D((d,), ("embed",), init="zeros")
+    return out
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """(Gated-)linear-unit MLP with residual; the resident-mode Pallas
+    kernel (kernels/fused_block.py) fuses exactly this function."""
+    h = rms_norm(x, p["pre_norm"])
+    u = h @ p["w_up"].astype(h.dtype)
+    if cfg.mlp_gated:
+        a = act_fn(cfg.act)(h @ p["w_gate"].astype(h.dtype))
+        u = a * u
+    else:
+        u = act_fn(cfg.act)(u)
+    y = u @ p["w_down"].astype(h.dtype)
+    if cfg.sandwich_norm:
+        y = rms_norm(y, p["post_norm"])
+    return x + y
+
+
+# ---------------------------------------------------------------- losses
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """logits [..., V] fp32, labels int [...]."""
+    mask = (labels != ignore_id)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

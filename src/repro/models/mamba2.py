@@ -1,0 +1,197 @@
+"""Mamba-2 (SSD, state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks of ``ssm_chunk`` tokens, linear state passing
+between chunks via lax.scan (HLO stays small, memory bounded -- this is what
+makes the long_500k cell lowerable).  Decode is the O(1) recurrent update.
+
+kernels/ssd_scan.py is the Pallas twin of the chunked scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import D, rms_norm
+
+
+def ssm_defs(cfg) -> dict:
+    """Input projections are split per component (z / x / BC / dt) so each
+    output dimension shards cleanly on the 'ff'->model axis -- a fused
+    in_proj would put split boundaries mid-shard and force resharding."""
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    return {
+        "pre_norm": D((d,), ("embed",), init="zeros"),
+        "in_z": D((d, di), ("embed", "ff")),
+        "in_x": D((d, di), ("embed", "ff")),
+        "in_bc": D((d, 2 * g * n), ("embed", "ff")),
+        "in_dt": D((d, nh), ("embed", "ff")),
+        "conv_x_w": D((cfg.conv_width, di), (None, "ff")),
+        "conv_x_b": D((di,), ("ff",), init="zeros"),
+        "conv_bc_w": D((cfg.conv_width, 2 * g * n), (None, "ff")),
+        "conv_bc_b": D((2 * g * n,), ("ff",), init="zeros"),
+        "A_log": D((nh,), (None,), init="zeros"),
+        "D": D((nh,), (None,), init="ones"),
+        "dt_bias": D((nh,), (None,), init="zeros"),
+        "gate_norm": D((di,), ("ff",), init="zeros"),
+        "out_proj": D((di, d), ("ff", "embed")),
+    }
+
+
+def _dt_activation(dt, dt_bias):
+    return jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                state: jax.Array | None = None):
+    """x [B,S,Cd]; w [K,Cd] depthwise causal conv; state [B,K-1,Cd] carries
+    the last K-1 inputs for decode.  Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # [B,S+K-1,Cd]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D_, chunk: int, h0=None):
+    """SSD forward.
+    x [b,s,h,p]; dt [b,s,h] (post-softplus fp32); A [h] (negative);
+    Bm, Cm [b,s,g,n]; D_ [h]; h0 optional initial state [b,h,p,n].
+    Returns y [b,s,h,p] and final state [b,h,p,n]."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        # dt = 0 on padding: no state change, no output contribution.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+    hg = h // g                              # heads per B/C group
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, g, n)
+    Cc = Cm.reshape(b, nc, chunk, g, n)
+
+    dA = dtc * A                              # [b,nc,l,h], negative
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    def per_chunk(args):
+        xk, dtk, Bk, Ck, dAk, dAck = args
+        # L[i,j] = exp(sum_{j<m<=i} dA)  for i >= j
+        seg = dAck[:, :, None, :] - dAck[:, None, :, :]       # [b,l,l,h]
+        ii = jnp.arange(chunk)
+        causal = ii[:, None] >= ii[None, :]
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        xdt = xk * dtk[..., None]                             # [b,l,h,p]
+        # intra-chunk (quadratic within chunk)
+        scores = jnp.einsum("blgn,bmgn->blmg", Ck, Bk,
+                            preferred_element_type=jnp.float32)
+        scores = jnp.repeat(scores, hg, axis=-1)              # [b,l,m,h]
+        y_diag = jnp.einsum("blmh,blmh,bmhp->blhp", scores, L,
+                            xdt.astype(jnp.float32))
+        # state contribution of this chunk: sum_m exp(dAc_l - dAc_m) B_m xdt_m
+        decay = jnp.exp(dAck[:, -1:, :] - dAck)               # [b,l,h]
+        Bh = jnp.repeat(Bk, hg, axis=2)                       # [b,l,h,n]
+        state = jnp.einsum("blhn,blh,blhp->bhpn",
+                           Bh.astype(jnp.float32), decay,
+                           xdt.astype(jnp.float32))
+        chunk_decay = jnp.exp(dAck[:, -1, :])                 # [b,h]
+        return y_diag, state, chunk_decay
+
+    def scan_step(h_prev, inputs):
+        xk, dtk, Bk, Ck, dAk, dAck = inputs
+        y_diag, state_inc, chunk_decay = per_chunk(inputs)
+        # inter-chunk: y_off[l] = C_l . (exp(dAc_l) * h_prev)
+        Ch = jnp.repeat(Ck, hg, axis=2)                       # [b,l,h,n]
+        in_decay = jnp.exp(dAck)                              # [b,l,h]
+        y_off = jnp.einsum("blhn,bhpn->blhp", Ch.astype(jnp.float32),
+                           h_prev) * in_decay[..., None]
+        h_new = h_prev * chunk_decay[:, :, None, None] + state_inc
+        return h_new, y_diag + y_off
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in
+                   (xc, dtc, Bc, Cc, dA, dA_cum))
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, yc = jax.lax.scan(scan_step, h0.astype(jnp.float32), inputs)
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, s_pad, h, p)
+    y = y + x.astype(jnp.float32) * D_[None, None, :, None]
+    if pad:
+        y = y[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def ssm_apply(p: dict, x: jax.Array, cfg,
+              state: dict | None = None, pos=None):
+    """Full Mamba-2 block with residual.  state (decode):
+      {"conv": [B,K-1,conv_dim], "ssd": [B,h,p,n]}.
+    Returns (y, new_state)."""
+    cfgd = jnp.dtype(cfg.dtype)
+    B_, S, d = x.shape
+    di, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    nh, hp = cfg.ssm_nheads, cfg.ssm_headdim
+
+    h = rms_norm(x, p["pre_norm"])
+    z = h @ p["in_z"].astype(h.dtype)
+    xin = h @ p["in_x"].astype(h.dtype)
+    bc = h @ p["in_bc"].astype(h.dtype)
+    dt = h @ p["in_dt"].astype(h.dtype)
+    cx = None if state is None else state["convx"]
+    cbc = None if state is None else state["convbc"]
+    xin, new_convx = causal_conv(xin, p["conv_x_w"].astype(cfgd),
+                                 p["conv_x_b"].astype(cfgd), cx)
+    bc, new_convbc = causal_conv(bc, p["conv_bc_w"].astype(cfgd),
+                                 p["conv_bc_b"].astype(cfgd), cbc)
+    Bm, Cm = jnp.split(bc, [g * n], axis=-1)
+    xh = xin.reshape(B_, S, nh, hp)
+    Bm = Bm.reshape(B_, S, g, n)
+    Cm = Cm.reshape(B_, S, g, n)
+    dtv = _dt_activation(dt, p["dt_bias"])                    # [B,S,nh] fp32
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # [nh]
+
+    if state is None or S > 1:
+        # train, or prefill-with-state (chunked path, carries h0)
+        h0 = None if state is None else state["ssd"]
+        y, ssd_state = ssd_chunked(xh, dtv, A, Bm, Cm,
+                                   p["D"].astype(jnp.float32),
+                                   cfg.ssm_chunk, h0=h0)
+    else:
+        # recurrent decode: S == 1
+        hg = nh // g
+        dA = jnp.exp(dtv[:, 0, :] * A)                        # [B,nh]
+        Bh = jnp.repeat(Bm[:, 0], hg, axis=1)                 # [B,nh,n]
+        xdt = (xh[:, 0] * dtv[:, 0, :, None]).astype(jnp.float32)
+        new_h = (state["ssd"] * dA[:, :, None, None]
+                 + jnp.einsum("bhn,bhp->bhpn", Bh.astype(jnp.float32), xdt))
+        Ch = jnp.repeat(Cm[:, 0], hg, axis=1)                 # [B,nh,n]
+        y = jnp.einsum("bhpn,bhn->bhp", new_h, Ch.astype(jnp.float32))
+        y = y + xh[:, 0].astype(jnp.float32) * p["D"][None, :, None]
+        y = y[:, None].astype(x.dtype)
+        ssd_state = new_h
+
+    y = y.reshape(B_, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"])
+    out = y @ p["out_proj"].astype(y.dtype)
+    new_state = {"convx": new_convx, "convbc": new_convbc, "ssd": ssd_state}
+    return x + out, new_state
+
+
+def init_ssm_state(cfg, batch: int) -> dict:
+    di, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "convx": jnp.zeros((batch, cfg.conv_width - 1, di), dt),
+        "convbc": jnp.zeros((batch, cfg.conv_width - 1, 2 * g * n), dt),
+        "ssd": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, n),
+                         jnp.float32),
+    }

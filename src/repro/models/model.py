@@ -1,0 +1,211 @@
+"""Unified model API over the 10 assigned architectures.
+
+  model = Model(cfg)
+  params = model.init(rng)                     # or .abstract_params()
+  loss, metrics = model.loss(params, batch)    # train
+  logits, cache = model.prefill(params, batch)
+  logits, cache = model.decode_step(params, cache, tokens, pos)
+
+Batch dicts (all int32 unless noted):
+  train:   {"tokens": [B,S], "labels": [B,S]}            (+ stubs below)
+  prefill: {"tokens": [B,S]}                              (+ stubs below)
+  audio adds  "frames":  [B, enc_seq, d]  bf16  (conv frontend STUB)
+  vlm   adds  "patches": [B, vision_seq, d] bf16 (vision tower STUB)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (D, abstract, cross_entropy, embed_defs,
+                                 embed_lookup, materialize, partition_specs,
+                                 rms_norm, softcap)
+from repro.models.transformer import apply_stack, stack_cache, stack_defs
+
+LOSS_CHUNK = 8192      # tokens per unembed chunk (bounds logits memory)
+
+
+def _sinusoidal(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return np.concatenate([np.sin(ang), np.cos(ang)], -1).astype(np.float32)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        defs = {
+            "embed": embed_defs(cfg),
+            "stack": stack_defs(cfg, decoder=True),
+            "final_norm": D((cfg.d_model,), ("embed",), init="zeros"),
+        }
+        if cfg.family == "audio":
+            defs["enc_stack"] = stack_defs(cfg, decoder=False)
+            defs["enc_norm"] = D((cfg.d_model,), ("embed",), init="zeros")
+        return defs
+
+    def init(self, rng: jax.Array, dtype: str | None = None):
+        return materialize(self.param_defs(), rng, dtype)
+
+    def abstract_params(self, dtype: str | None = None):
+        return abstract(self.param_defs(), dtype)
+
+    def pspecs(self, rules: dict):
+        return partition_specs(self.param_defs(), rules)
+
+    # -------------------------------------------------------------- stubs
+    def _context(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+            pe = jnp.asarray(_sinusoidal(frames.shape[1], cfg.d_model),
+                             frames.dtype)
+            x = frames + pe
+            x, _, _ = apply_stack(params["enc_stack"], x, cfg, decoder=False,
+                                  remat="none")
+            return rms_norm(x, params["enc_norm"])
+        if cfg.family == "vlm":
+            return batch["patches"].astype(jnp.dtype(cfg.dtype))
+        return None
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch, remat: str = "full"):
+        cfg = self.cfg
+        ctx = self._context(params, batch)
+        x = embed_lookup(params["embed"], batch["tokens"], cfg)
+        x, _, aux = apply_stack(params["stack"], x, cfg, cache=None,
+                                pos=0, ctx=ctx, remat=remat)
+        x = rms_norm(x, params["final_norm"])
+        nll = self._chunked_xent(params, x, batch["labels"])
+        return nll + aux, {"nll": nll, "aux": aux}
+
+    def _chunked_xent(self, params, x, labels):
+        """Cross entropy scanned over *sequence* chunks: the batch dim stays
+        intact (and batch-sharded -- reshaping across batch would force XLA
+        to all-gather the full activations), logits memory is bounded to
+        [B, chunk, V/shard], and each chunk is rematerialized in the
+        backward pass."""
+        cfg = self.cfg
+        B, S, d = x.shape
+        chunk = min(max(1, LOSS_CHUNK // B), S)
+        n = S // chunk
+        rem = S - n * chunk
+
+        def unembed_chunk(xc):
+            if cfg.tie_embeddings:
+                logits = jnp.einsum("bsd,vd->bsv", xc,
+                                    params["embed"]["tok"].astype(xc.dtype))
+            else:
+                logits = jnp.einsum("bsd,dv->bsv", xc,
+                                    params["embed"]["head"].astype(xc.dtype))
+            return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+        @partial(jax.checkpoint,
+                 policy=jax.checkpoint_policies.nothing_saveable)
+        def step(acc, inp):
+            xc, lc = inp
+            logits = unembed_chunk(xc)
+            mask = lc != -1
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None].clip(0),
+                                       axis=-1)[..., 0]
+            return (acc[0] + ((lse - gold) * mask).sum(),
+                    acc[1] + mask.sum()), None
+
+        xs = (x[:, :n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1),
+              labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1))
+        (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.int32(0)), xs)
+        if rem:
+            (tot, cnt), _ = step((tot, cnt),
+                                 (x[:, n * chunk:], labels[:, n * chunk:]))
+        return tot / jnp.maximum(cnt, 1)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        dtype = jnp.dtype(self.cfg.dtype) if dtype is None else dtype
+        cache = stack_cache(self.cfg, batch, max_len, decoder=True,
+                            dtype=dtype)
+        cache["pos"] = jnp.zeros((), jnp.int32)
+        return cache
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=None):
+        return jax.eval_shape(
+            partial(self.init_cache, batch, max_len, dtype))
+
+    def prefill(self, params, batch, cache=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if cache is None:
+            # Cache must cover the planned decode horizon, not just S.
+            cache = self.init_cache(B, max(cfg.max_seq, S))
+        ctx = self._context(params, batch)
+        x = embed_lookup(params["embed"], tokens, cfg)
+        pos = cache["pos"]
+        stack_c = {k: v for k, v in cache.items() if k != "pos"}
+        x, new_cache, _ = apply_stack(params["stack"], x, cfg, cache=stack_c,
+                                      pos=pos, ctx=ctx, remat="none",
+                                      fill_cross=True)
+        x = rms_norm(x, params["final_norm"])
+        logits = self._last_logits(params, x)
+        new_cache["pos"] = pos + S
+        return logits, new_cache
+
+    def decode_step(self, params, cache, tokens, pos=None):
+        """tokens [B,1]; returns (logits [B,V], new_cache)."""
+        cfg = self.cfg
+        pos = cache["pos"] if pos is None else pos
+        x = embed_lookup(params["embed"], tokens, cfg)
+        stack_c = {k: v for k, v in cache.items() if k != "pos"}
+        x, new_cache, _ = apply_stack(params["stack"], x, cfg, cache=stack_c,
+                                      pos=pos, ctx=None, remat="none")
+        x = rms_norm(x, params["final_norm"])
+        logits = self._last_logits(params, x)
+        new_cache["pos"] = pos + tokens.shape[1]
+        return logits, new_cache
+
+    def _last_logits(self, params, x):
+        cfg = self.cfg
+        xl = x[:, -1]
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bd,vd->bv", xl,
+                                params["embed"]["tok"].astype(xl.dtype))
+        else:
+            logits = jnp.einsum("bd,dv->bv", xl,
+                                params["embed"]["head"].astype(xl.dtype))
+        return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+    # --------------------------------------------------------- batch specs
+    def batch_spec(self, seq_len: int, batch: int, mode: str) -> dict:
+        """ShapeDtypeStructs for every model input of a shape cell."""
+        cfg = self.cfg
+        i32 = jnp.int32
+        bf16 = jnp.bfloat16
+        spec: dict = {}
+        if mode == "train":
+            spec["tokens"] = jax.ShapeDtypeStruct((batch, seq_len), i32)
+            spec["labels"] = jax.ShapeDtypeStruct((batch, seq_len), i32)
+        elif mode == "prefill":
+            spec["tokens"] = jax.ShapeDtypeStruct((batch, seq_len), i32)
+        elif mode == "decode":
+            spec["tokens"] = jax.ShapeDtypeStruct((batch, 1), i32)
+        if cfg.family == "audio" and mode != "decode":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.enc_seq, cfg.d_model), bf16)
+        if cfg.family == "vlm" and mode != "decode":
+            spec["patches"] = jax.ShapeDtypeStruct(
+                (batch, cfg.vision_seq, cfg.d_model), bf16)
+        return spec
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

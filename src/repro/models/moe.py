@@ -1,0 +1,183 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch with
+explicit expert-parallel all-to-all.
+
+Two execution paths:
+
+  * `_moe_shard_map` (production, TP plan): tokens stay on their data
+    shard; each shard ranks its assignments locally (one stable argsort
+    over T_loc*k), scatters into a local [E, C_loc, d] buffer, and a
+    `lax.all_to_all` over the 'model' axis delivers expert slices to their
+    owners -- compute runs on [E_loc, 16*C_loc, d], a second a2a returns
+    outputs, combine is local.  The only cross-device traffic is the
+    physical token<->expert payload (~ cf * tokens * k * d bytes).
+
+  * `_moe_local` (single-device smoke tests / DP plans): same math without
+    the mesh choreography.
+
+History (EXPERIMENTS.md §Perf): a pjit-only version with a global argsort
+and data-dependent scatter across the expert-sharded buffer made the SPMD
+partitioner materialize full [B, E*C, d] gathers -- 205s (global-sort
+variant) and 1126s (per-row variant) of collective time per qwen3 train
+step vs ~5s of compute.  shard_map pins the schedule to the physical a2a.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import D, act_fn, rms_norm
+
+
+def moe_defs(cfg) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "pre_norm": D((d,), ("embed",), init="zeros"),
+        "router": D((d, e), ("embed", "experts")),
+        "w_gate": D((e, d, ff), ("experts", "embed", "ff")),
+        "w_up": D((e, d, ff), ("experts", "embed", "ff")),
+        "w_down": D((e, ff, d), ("experts", "ff", "embed")),
+    }
+
+
+def _capacity(tokens: int, cfg) -> int:
+    c = int(cfg.capacity_factor * tokens * cfg.top_k / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def _rank_and_slot(flat_e: jax.Array, E: int, C: int):
+    """flat_e [N] expert ids -> (keep [N], slot [N]) with rank-in-expert
+    capacity dropping; one stable argsort, no [N, E] tensors."""
+    N = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    ranks_sorted = jnp.arange(N) - starts[flat_e[order]]
+    ranks = jnp.zeros((N,), jnp.int32).at[order].set(
+        ranks_sorted.astype(jnp.int32))
+    keep = ranks < C
+    slot = flat_e * C + jnp.where(keep, ranks, 0)
+    return keep, slot
+
+
+def _expert_ffn(buf, p, cfg):
+    a = act_fn(cfg.act)(jnp.einsum(
+        "ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype),
+        preferred_element_type=jnp.float32).astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+    return jnp.einsum("ecf,efd->ecd", a * u,
+                      p["w_down"].astype(buf.dtype))
+
+
+def _route(p, h2, cfg):
+    """h2 [T, d] -> (gate_vals [T,K], expert_idx [T,K], aux-loss pieces)."""
+    logits = h2.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((cfg.n_experts,), jnp.float32).at[
+        expert_idx.reshape(-1)].add(1.0 / expert_idx.size)
+    return gate_vals, expert_idx, me, ce
+
+
+def _dispatch_combine(p, h2, cfg, a2a_axis: str | None):
+    """Core dispatch -> expert ffn -> combine on a [T, d] token block.
+    With `a2a_axis`, experts are sharded over that mesh axis and the
+    buffers ride lax.all_to_all."""
+    T, d = h2.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(T, cfg)
+    gate_vals, expert_idx, me, ce = _route(p, h2, cfg)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    flat_e = expert_idx.reshape(-1)                       # [T*K]
+    keep, slot = _rank_and_slot(flat_e, E, C)
+    tok = jnp.repeat(jnp.arange(T), K)
+    contrib = jnp.where(keep[:, None], h2[tok], 0)
+    buf = jnp.zeros((E * C, d), h2.dtype).at[slot].add(contrib)
+    buf = buf.reshape(E, C, d)
+
+    if a2a_axis is not None:
+        n = jax.lax.axis_size(a2a_axis)
+        # [E, C, d] -> [E/n, n*C, d]: expert slices travel to their owner
+        buf = jax.lax.all_to_all(buf, a2a_axis, split_axis=0,
+                                 concat_axis=1, tiled=True)
+        local_p = {k: v for k, v in p.items()}
+        out = _expert_ffn(buf, local_p, cfg)
+        out = jax.lax.all_to_all(out, a2a_axis, split_axis=1,
+                                 concat_axis=0, tiled=True)
+    else:
+        out = _expert_ffn(buf, p, cfg)
+
+    out = out.reshape(E * C, d)
+    # keep the combine in the activation dtype: a f32 gate weight here
+    # promotes y -- and the whole backward collective chain -- to f32
+    w = jnp.where(keep, gate_vals.reshape(-1), 0).astype(h2.dtype)
+    gathered = out[slot] * w[:, None]
+    y = jnp.zeros((T, d), h2.dtype).at[tok].add(gathered)
+    return y, aux
+
+
+def _moe_local(p, x, cfg):
+    B, S, d = x.shape
+    h = rms_norm(x, p["pre_norm"])
+    y, aux = _dispatch_combine(p, h.reshape(B * S, d), cfg, None)
+    return x + y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _moe_shard_map(p, x, cfg, mesh, batch_axes, model_axis):
+    B, S, d = x.shape
+    n_model = mesh.shape[model_axis]
+
+    def local_fn(xl, pre_norm, router, wg, wu, wd):
+        Bl, Sl, _ = xl.shape
+        T = Bl * Sl
+        lp = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        h = rms_norm(xl, pre_norm).reshape(T, d)
+        if T % n_model == 0 and T >= n_model * 8:
+            # Sequence-parallel dispatch: activations are replicated
+            # across the model axis under the TP plan, so each model rank
+            # routes only its 1/n token slice (cuts a2a payload n-fold),
+            # then the combined outputs are all-gathered back.
+            chunk = T // n_model
+            mi = jax.lax.axis_index(model_axis)
+            h2 = jax.lax.dynamic_slice_in_dim(h, mi * chunk, chunk)
+            y_chunk, aux = _dispatch_combine(lp, h2, cfg, model_axis)
+            y = jax.lax.all_gather(y_chunk, model_axis, axis=0,
+                                   tiled=True)
+            aux = jax.lax.pmean(aux, batch_axes + (model_axis,))
+        else:
+            y, aux = _dispatch_combine(lp, h, cfg, model_axis)
+            aux = jax.lax.pmean(aux, batch_axes)
+        return (xl + y.reshape(Bl, Sl, d).astype(xl.dtype)), aux
+
+    bspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
+              None, None)
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(bspec, P(None), P(None, None),
+                  P(model_axis, None, None), P(model_axis, None, None),
+                  P(model_axis, None, None)),
+        out_specs=(bspec, P()),
+        check_vma=False)
+    return fn(x, p["pre_norm"], p["router"], p["w_gate"], p["w_up"],
+              p["w_down"])
+
+
+def moe_apply(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x [B,S,d] -> (y with residual, aux_loss)."""
+    from repro.models.transformer import _CTX
+    mesh = _CTX.get("mesh")
+    batch_axes = _CTX.get("batch_axes")
+    model_axis = _CTX.get("model_axis")
+    use_sm = (mesh is not None and batch_axes and model_axis
+              and model_axis not in batch_axes
+              and cfg.n_experts % mesh.shape[model_axis] == 0)
+    if use_sm:
+        return _moe_shard_map(p, x, cfg, mesh, tuple(batch_axes),
+                              model_axis)
+    return _moe_local(p, x, cfg)

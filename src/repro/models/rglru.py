@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+recurrence:  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+             a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+gates r, i come from block-diagonal projections of the conv'd input.
+
+Prefill/train uses jax.lax.associative_scan (log-depth); decode is the O(1)
+update.  The recurrent state is the paper's SE-side-path analogue: pinned
+on-chip in resident mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import D, act_fn, rms_norm
+
+C_FACTOR = 8.0
+N_DIAG_BLOCKS = 8
+
+
+def rglru_defs(cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    bw = w // N_DIAG_BLOCKS
+    return {
+        "pre_norm": D((d,), ("embed",), init="zeros"),
+        "w_x": D((d, w), ("embed", "ff")),          # input branch
+        "w_y": D((d, w), ("embed", "ff")),          # gate branch
+        "conv_w": D((cfg.conv_width, w), (None, "ff")),
+        "conv_b": D((w,), ("ff",), init="zeros"),
+        # block-diagonal RG-LRU gate projections
+        "gate_a": D((N_DIAG_BLOCKS, bw, bw), (None, "ff", None)),
+        "gate_x": D((N_DIAG_BLOCKS, bw, bw), (None, "ff", None)),
+        "lam": D((w,), ("ff",), init="ones"),
+        "w_out": D((w, d), ("ff", "embed")),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [..., nb*bw] @ blockdiag(w [nb,bw,bw]) -> [..., nb*bw]."""
+    nb, bw, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bw)
+    y = jnp.einsum("...nb,nbc->...nc", xs, w.astype(x.dtype))
+    return y.reshape(*x.shape[:-1], nb * bw)
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(_block_diag(xc, p["gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(xc, p["gate_x"]).astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i * xc.astype(jnp.float32)
+
+
+def rglru_scan(a: jax.Array, b: jax.Array,
+               h0: jax.Array | None = None, chunk: int = 256) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t over axis 1; a,b [B,S,W] fp32.
+
+    Chunked: an outer lax.scan carries h across chunks (so the backward
+    pass saves only [B,W] per chunk and rematerializes the rest) while a
+    log-depth associative scan runs inside each chunk."""
+    B, S, W = a.shape
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    if S <= chunk or S % chunk:
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return h
+
+    nc = S // chunk
+    ac = a.reshape(B, nc, chunk, W).swapaxes(0, 1)
+    bc = b.reshape(B, nc, chunk, W).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(h, ab):
+        ak, bk = ab
+        bk = bk.at[:, 0].add(ak[:, 0] * h)
+        _, hh = jax.lax.associative_scan(combine, (ak, bk), axis=1)
+        return hh[:, -1], hh
+
+    _, hs = jax.lax.scan(step, jnp.zeros((B, W), a.dtype), (ac, bc))
+    return hs.swapaxes(0, 1).reshape(B, S, W)
+
+
+def rglru_apply(p: dict, x: jax.Array, cfg,
+                state: dict | None = None, pos=None):
+    """Griffin recurrent block with residual.  state (decode):
+      {"conv": [B,K-1,W], "h": [B,W] fp32}."""
+    from repro.models.mamba2 import causal_conv
+    B_, S, d = x.shape
+    hidden = rms_norm(x, p["pre_norm"])
+    gate = act_fn(cfg.act)(hidden @ p["w_y"].astype(hidden.dtype))
+    xb = hidden @ p["w_x"].astype(hidden.dtype)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = causal_conv(xb, p["conv_w"].astype(x.dtype),
+                               p["conv_b"].astype(x.dtype), conv_state)
+    a, b = _gates(p, xc)
+    if state is None or S > 1:
+        h0 = None if state is None else state["h"]
+        h = rglru_scan(a, b, h0=h0)
+        h_last = h[:, -1]
+    else:
+        h = (a[:, 0] * state["h"] + b[:, 0])[:, None]
+        h_last = h[:, 0]
+    y = (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    return x + y, {"conv": new_conv, "h": h_last}
+
+
+def init_rglru_state(cfg, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

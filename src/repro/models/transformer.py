@@ -1,0 +1,364 @@
+"""Composable block definitions + scan-over-layer-groups stack.
+
+Layer kinds ('global' | 'local' | 'cross' | 'ssm' | 'recurrent' | 'enc' |
+'encdec') are cycled per the config ``pattern``; one *group* = one full
+pattern cycle, and the stack is a lax.scan over stacked group params, which
+keeps the lowered HLO size independent of depth (94-layer qwen3 compiles as
+fast as 6-layer whisper).  A remainder (depth % pattern) is applied as
+explicit tail layers (e.g. recurrentgemma's 26 = 3*8 + 2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.attention import (blocked_attention, cache_update,
+                                    cp_attention, init_kv_cache,
+                                    plain_attention, ring_positions)
+from repro.models.layers import (D, ParamDef, apply_rope, grad_fence,
+                                 mlp_apply, mlp_defs, rms_norm, rope_angles)
+from repro.models.mamba2 import init_ssm_state, ssm_apply, ssm_defs
+from repro.models.moe import moe_apply, moe_defs
+from repro.models.rglru import init_rglru_state, rglru_apply, rglru_defs
+
+# --------------------------------------------------------------- sharding ctx
+_CTX: dict = {"batch_axes": None, "model_axis": None, "mesh": None,
+              "seq_shard": False, "cp": False}
+
+
+def set_mesh_axes(batch_axes=None, model_axis=None, mesh=None,
+                  seq_shard: bool = False, cp: bool = False) -> None:
+    _CTX["batch_axes"] = batch_axes
+    _CTX["model_axis"] = model_axis
+    _CTX["mesh"] = mesh
+    _CTX["seq_shard"] = seq_shard
+    _CTX["cp"] = cp
+
+
+def shard_hidden(x: jax.Array) -> jax.Array:
+    """Constrain activations between blocks.  Default: batch-sharded,
+    feature-replicated.  With seq_shard (Megatron-SP, TP plans): the
+    sequence dim additionally shards over the model axis, so the TP
+    boundary all-reduces lower to reduce-scatter + all-gather (half the
+    physical link bytes) and the resident stream per device shrinks
+    n_model-fold."""
+    if _CTX["batch_axes"] is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    seq_ax = _CTX["model_axis"] if (_CTX["seq_shard"] and x.ndim == 3) \
+        else None
+    spec = P(_CTX["batch_axes"], seq_ax, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ------------------------------------------------------------- definitions
+def attn_defs(cfg, kind: str) -> dict:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out = {
+        "pre_norm": D((d,), ("embed",), init="zeros"),
+        "wq": D((d, nh * hd), ("embed", "heads")),
+        "wk": D((d, nkv * hd), ("embed", "kv")),
+        "wv": D((d, nkv * hd), ("embed", "kv")),
+        "wo": D((nh * hd, d), ("heads", "embed")),
+    }
+    if cfg.sandwich_norm:
+        out["post_norm"] = D((d,), ("embed",), init="zeros")
+    if cfg.qk_norm:
+        out["q_norm"] = D((hd,), (None,), init="zeros")
+        out["k_norm"] = D((hd,), (None,), init="zeros")
+    if kind == "cross" and cfg.family == "vlm":
+        out["gate_attn"] = D((), (), init="zeros")
+        out["gate_mlp"] = D((), (), init="zeros")
+    return out
+
+
+def ffn_defs(cfg) -> dict:
+    return moe_defs(cfg) if cfg.n_experts else mlp_defs(cfg)
+
+
+def layer_defs(cfg, kind: str) -> dict:
+    if kind == "ssm":
+        return {"ssm": ssm_defs(cfg)}
+    if kind == "recurrent":
+        return {"rglru": rglru_defs(cfg), "ffn": mlp_defs(cfg)}
+    if kind == "encdec":                       # whisper decoder layer
+        return {"attn": attn_defs(cfg, "global"),
+                "xattn": attn_defs(cfg, "cross"),
+                "ffn": ffn_defs(cfg)}
+    return {"attn": attn_defs(cfg, kind), "ffn": ffn_defs(cfg)}
+
+
+# ------------------------------------------------------------ attention op
+def attn_apply(p: dict, x: jax.Array, cfg, kind: str, *,
+               cache: dict | None = None, pos=0, ctx: jax.Array | None = None,
+               causal: bool = True, fill_cross: bool = False):
+    """One attention sub-block with residual.  Returns (y, new_cache)."""
+    B, S, d = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["pre_norm"])
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, S, nh, hd)
+
+    cross = kind == "cross"
+    new_cache = cache
+    if cross:
+        if cache is not None and not fill_cross:
+            k, v = cache["ck"], cache["cv"]       # decode: precomputed
+        else:
+            assert ctx is not None, "cross layer needs context"
+            k = (ctx @ p["wk"].astype(ctx.dtype)).reshape(
+                B, ctx.shape[1], nkv, hd)
+            v = (ctx @ p["wv"].astype(ctx.dtype)).reshape(
+                B, ctx.shape[1], nkv, hd)
+            if cache is not None:                 # prefill: store
+                new_cache = {"ck": k.astype(cache["ck"].dtype),
+                             "cv": v.astype(cache["cv"].dtype)}
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"])
+            k = rms_norm(k, p["k_norm"])
+        attn_fn = plain_attention if cache is None else blocked_attention
+        out = attn_fn(q, k, v, causal=False,
+                      softcap_val=cfg.attn_softcap)
+    else:
+        k = (h @ p["wk"].astype(h.dtype)).reshape(B, S, nkv, hd)
+        v = (h @ p["wv"].astype(h.dtype)).reshape(B, S, nkv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"])
+            k = rms_norm(k, p["k_norm"])
+        sin, cos = rope_angles(pos + jnp.arange(S), hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+        window = cfg.window if kind == "local" else 0
+        if cache is None:
+            # training path: differentiable, remat-friendly; the fence
+            # keeps dq/dk/dv in the activation dtype (see grad_fence)
+            out = plain_attention(
+                grad_fence(q), grad_fence(k), grad_fence(v),
+                q_offset=pos, causal=causal, window=window,
+                softcap_val=cfg.attn_softcap)
+        else:
+            ring = cache["k"].shape[1] < cfg.max_seq
+            new_cache = cache_update(cache, k, v, pos, ring=ring)
+            if S > 1:
+                # Prefill: attend the fresh full K/V (prefill starts at
+                # pos 0; the cache is only written for later decode).  For
+                # ring caches this is also required for correctness: the
+                # trimmed ring has dropped early keys.
+                mesh = _CTX.get("mesh")
+                use_cp = (_CTX.get("cp") and mesh is not None
+                          and _CTX.get("model_axis")
+                          and _CTX["model_axis"] not in
+                          (_CTX.get("batch_axes") or ())
+                          and S % mesh.shape[_CTX["model_axis"]] == 0)
+                if use_cp:
+                    out = cp_attention(
+                        q, k, v, mesh=mesh,
+                        batch_axes=tuple(_CTX["batch_axes"]),
+                        model_axis=_CTX["model_axis"],
+                        causal=True, window=window,
+                        softcap_val=cfg.attn_softcap)
+                else:
+                    out = blocked_attention(
+                        q, k, v, q_offset=pos, causal=True, window=window,
+                        softcap_val=cfg.attn_softcap)
+            elif ring:
+                kpos = ring_positions(pos + S, cache["k"].shape[1])
+                out = blocked_attention(
+                    q, new_cache["k"], new_cache["v"], q_offset=pos,
+                    causal=True, window=window,
+                    softcap_val=cfg.attn_softcap, k_positions=kpos)
+            else:
+                # Decode (S == 1): plain attention keeps a
+                # sequence-sharded cache distributed (see plain_attention).
+                out = plain_attention(
+                    q, new_cache["k"], new_cache["v"], q_offset=pos,
+                    causal=True, window=window,
+                    softcap_val=cfg.attn_softcap, kv_len=pos + S)
+    y = (out.reshape(B, S, nh * hd) @ p["wo"].astype(x.dtype))
+    if cfg.sandwich_norm:
+        y = rms_norm(y, p["post_norm"])
+    if cross and "gate_attn" in p:
+        y = jnp.tanh(p["gate_attn"].astype(y.dtype)) * y
+    return x + y, new_cache
+
+
+def ffn_apply(p: dict, x: jax.Array, cfg, gate: jax.Array | None = None):
+    """Returns (y, aux_loss)."""
+    if cfg.n_experts:
+        return moe_apply(p, x, cfg)
+    y = mlp_apply(p, x, cfg)
+    if gate is not None:                      # vlm cross-layer MLP gate
+        y = x + jnp.tanh(gate.astype(x.dtype)) * (y - x)
+    return y, jnp.float32(0.0)
+
+
+# -------------------------------------------------------------- one layer
+def apply_layer(p: dict, x: jax.Array, cfg, kind: str, *,
+                cache=None, pos=0, ctx=None, fill_cross: bool = False):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    if kind == "ssm":
+        x, new_cache = ssm_apply(p["ssm"], x, cfg, state=cache, pos=pos)
+        return x, new_cache, aux
+    if kind == "recurrent":
+        x, new_state = rglru_apply(p["rglru"], x, cfg, state=cache, pos=pos)
+        x, aux = ffn_apply(p["ffn"], x, cfg)
+        return x, new_state, aux
+    if kind == "encdec":
+        sc = None if cache is None else cache.get("self")
+        xc = None if cache is None else cache.get("crosskv")
+        x, new_self = attn_apply(p["attn"], x, cfg, "global",
+                                 cache=sc, pos=pos)
+        x, new_cross = attn_apply(p["xattn"], x, cfg, "cross",
+                                  cache=xc, ctx=ctx, fill_cross=fill_cross)
+        x, aux = ffn_apply(p["ffn"], x, cfg)
+        new_cache = (None if cache is None
+                     else {"self": new_self, "crosskv": new_cross})
+        return x, new_cache, aux
+    if kind == "enc":
+        x, _ = attn_apply(p["attn"], x, cfg, "global", causal=False)
+        x, aux = ffn_apply(p["ffn"], x, cfg)
+        return x, None, aux
+    if kind == "cross":
+        x, new_cache = attn_apply(p["attn"], x, cfg, "cross",
+                                  cache=cache, ctx=ctx, fill_cross=fill_cross)
+        gate = p["attn"].get("gate_mlp")
+        x, aux = ffn_apply(p["ffn"], x, cfg, gate=gate)
+        return x, new_cache, aux
+    # global / local self-attention layer
+    x, new_cache = attn_apply(p["attn"], x, cfg, kind, cache=cache, pos=pos)
+    x, aux = ffn_apply(p["ffn"], x, cfg)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------- caches
+def layer_cache(cfg, kind: str, batch: int, max_len: int, dtype=jnp.bfloat16):
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    if kind == "ssm":
+        return init_ssm_state(cfg, batch)
+    if kind == "recurrent":
+        return init_rglru_state(cfg, batch)
+    if kind == "local":
+        return init_kv_cache(batch, min(max_len, cfg.window), nkv, hd, dtype)
+    if kind == "encdec":
+        return {"self": init_kv_cache(batch, max_len, nkv, hd, dtype),
+                "crosskv": {"ck": jnp.zeros((batch, cfg.enc_seq, nkv, hd),
+                                            dtype),
+                            "cv": jnp.zeros((batch, cfg.enc_seq, nkv, hd),
+                                            dtype)}}
+    if kind == "cross":
+        ctx_len = cfg.vision_seq
+        return {"ck": jnp.zeros((batch, ctx_len, nkv, hd), dtype),
+                "cv": jnp.zeros((batch, ctx_len, nkv, hd), dtype)}
+    return init_kv_cache(batch, max_len, nkv, hd, dtype)
+
+
+# ------------------------------------------------------ stack construction
+def stack_structure(cfg, decoder: bool = True) -> tuple[list[str], int, int]:
+    """(pattern kinds, n_groups, n_tail) for the decoder or encoder stack."""
+    if cfg.family == "audio" and decoder:
+        pattern = ["encdec"]
+        n_layers = cfg.n_layers
+    elif cfg.family == "audio":
+        pattern = ["enc"]
+        n_layers = cfg.enc_layers
+    elif cfg.family == "ssm":
+        pattern = ["ssm"]
+        n_layers = cfg.n_layers
+    else:
+        pattern = list(cfg.pattern)
+        n_layers = cfg.n_layers
+    n_groups = n_layers // len(pattern)
+    n_tail = n_layers - n_groups * len(pattern)
+    return pattern, n_groups, n_tail
+
+
+def stack_defs(cfg, decoder: bool = True) -> dict:
+    """ParamDef tree with group params stacked along a leading 'layers'
+    axis (added here by re-declaring each leaf with +1 dim)."""
+    pattern, n_groups, n_tail = stack_structure(cfg, decoder)
+
+    def stackify(d: ParamDef) -> ParamDef:
+        return D((n_groups,) + d.shape, ("layers",) + d.axes,
+                 init=d.init, scale=d.scale, dtype=d.dtype)
+
+    group = {f"p{i}": layer_defs(cfg, k) for i, k in enumerate(pattern)}
+    stacked = jax.tree.map(stackify, group,
+                           is_leaf=lambda x: isinstance(x, ParamDef))
+    tail = {f"t{i}": layer_defs(cfg, pattern[i % len(pattern)])
+            for i in range(n_tail)}
+    out = {"groups": stacked}
+    if tail:
+        out["tail"] = tail
+    return out
+
+
+def stack_cache(cfg, batch: int, max_len: int, decoder: bool = True,
+                dtype=jnp.bfloat16) -> dict:
+    pattern, n_groups, n_tail = stack_structure(cfg, decoder)
+    group = {f"p{i}": layer_cache(cfg, k, batch, max_len, dtype)
+             for i, k in enumerate(pattern)}
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), group)
+    out = {"groups": stacked}
+    if n_tail:
+        out["tail"] = {f"t{i}": layer_cache(cfg, pattern[i % len(pattern)],
+                                            batch, max_len, dtype)
+                       for i in range(n_tail)}
+    return out
+
+
+def apply_stack(params: dict, x: jax.Array, cfg, *, decoder: bool = True,
+                cache: dict | None = None, pos=0, ctx=None,
+                remat: str = "full", fill_cross: bool = False):
+    """Run the whole layer stack.  Returns (x, new_cache, aux_sum)."""
+    pattern, n_groups, n_tail = stack_structure(cfg, decoder)
+    has_cache = cache is not None
+
+    def group_step(carry, scanned):
+        x, aux = carry
+        gp = scanned[0] if has_cache else scanned
+        gc = scanned[1] if has_cache else None
+        new_gc = {}
+        for i, kind in enumerate(pattern):
+            lc = gc[f"p{i}"] if has_cache else None
+            x, nc, a = apply_layer(gp[f"p{i}"], x, cfg, kind,
+                                   cache=lc, pos=pos, ctx=ctx,
+                                   fill_cross=fill_cross)
+            if has_cache:
+                new_gc[f"p{i}"] = nc
+            aux = aux + a
+        x = shard_hidden(x)
+        return (x, aux), (new_gc if has_cache else 0)
+
+    if remat == "full":
+        group_step = jax.checkpoint(
+            group_step, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        group_step = jax.checkpoint(
+            group_step,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    xs = (params["groups"], cache["groups"]) if has_cache \
+        else params["groups"]
+    (x, aux), new_groups = jax.lax.scan(group_step, (x, jnp.float32(0.0)), xs)
+
+    new_cache = None
+    if has_cache:
+        new_cache = {"groups": new_groups}
+    if n_tail:
+        new_tail = {}
+        for i in range(n_tail):
+            kind = pattern[i % len(pattern)]
+            lc = cache["tail"][f"t{i}"] if has_cache else None
+            x, nc, a = apply_layer(params["tail"][f"t{i}"], x, cfg, kind,
+                                   cache=lc, pos=pos, ctx=ctx,
+                                   fill_cross=fill_cross)
+            if has_cache:
+                new_tail[f"t{i}"] = nc
+            aux = aux + a
+        if has_cache:
+            new_cache["tail"] = new_tail
+    return x, new_cache, aux

@@ -1,0 +1,53 @@
+"""Int8 error-feedback gradient compression for cross-pod reduction.
+
+At 2x16x16 scale the 'pod' axis rides the slow inter-pod links; gradients
+crossing it are quantized to int8 with a per-leaf scale, and the
+quantization error is fed back into the next step's gradient (error
+feedback keeps SGD/Adam convergence -- Karimireddy et al. 2019).  The
+compressed tree is what the pod-axis all-reduce sees: 4x fewer bytes for
+fp32 grads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, error):
+    """-> (q_int8 tree, scales tree, new_error tree)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_e = g - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    flat, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    qs, scales, errs = zip(*[one(g, e) for g, e in zip(flat, flat_e)])
+    return (jax.tree.unflatten(tdef, qs),
+            jax.tree.unflatten(tdef, scales),
+            jax.tree.unflatten(tdef, errs))
+
+
+def decompress(q_tree, scale_tree):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree)
+
+
+def compressed_psum(grads, error, axis_name: str):
+    """All-reduce `grads` over `axis_name` in int8 with error feedback.
+    Use inside shard_map/pmap-style code where the pod axis is manual."""
+    q, s, new_error = compress(grads, error)
+    q_sum = jax.tree.map(
+        lambda x: jax.lax.psum(x.astype(jnp.int32), axis_name), q)
+    # scales differ per participant: reduce with max for a safe bound
+    s_max = jax.tree.map(lambda x: jax.lax.pmax(x, axis_name), s)
+    n = jax.lax.psum(1, axis_name)
+    mean = jax.tree.map(
+        lambda qq, ss: qq.astype(jnp.float32) * ss / n, q_sum, s_max)
+    return mean, new_error

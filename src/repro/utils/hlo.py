@@ -1,0 +1,200 @@
+"""HLO-text analysis: collective-traffic accounting for the roofline.
+
+`cost_analysis()` does not expose collective bytes (and counts while-loop
+bodies exactly once), so we parse the compiled HLO text ourselves:
+
+ 1. split the module into computations;
+ 2. recover each while loop's trip count from its condition computation
+    (jax scans lower to `iter < C` -- we take the max integer constant) or
+    from a `known_trip_count={n:N}` annotation when XLA provides one;
+ 3. propagate execution multipliers through the call graph
+    (body/condition/to_apply/calls edges);
+ 4. sum each collective op's *result-segment* bytes (operands are printed
+    as bare %names in optimized HLO; for all-reduce result==operand, for
+    all-gather the result size ~= bytes moved through the links) weighted
+    by its computation's multiplier.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_SHAPE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_OPNAME = re.compile(
+    r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_WHILE = re.compile(r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|condition|body|branch_computations)="
+                    r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_TRIP = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 0)
+
+
+@dataclass
+class CollectiveReport:
+    bytes_by_kind: Counter = field(default_factory=Counter)
+    count_by_kind: Counter = field(default_factory=Counter)
+    static_count: Counter = field(default_factory=Counter)
+    trip_counts: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(self.bytes_by_kind.values()))
+
+    def summary(self) -> dict:
+        return {"total_bytes": self.total_bytes,
+                "bytes": {k: int(v) for k, v in self.bytes_by_kind.items()},
+                "dynamic_count": {k: int(v) for k, v
+                                  in self.count_by_kind.items()},
+                "static_count": dict(self.static_count),
+                "while_trip_counts": dict(self.trip_counts)}
+
+
+def split_computations(text: str) -> dict[str, list[str]]:
+    """Computation headers start at column 0 with '%name (' or
+    'ENTRY %name (' and end with '{' (params may contain nested parens)."""
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in text.splitlines():
+        if (line.startswith("%") or line.startswith("ENTRY")) \
+                and line.rstrip().endswith("{"):
+            m = _COMP_HDR.match(line)
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR.match(line[len("ENTRY"):].strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _line_result_bytes(line: str, opname_match: re.Match) -> int:
+    """Sum shapes between '=' and the op name (the result segment)."""
+    eq = line.find("=")
+    if eq < 0:
+        return 0
+    seg = line[eq:opname_match.start() + 1]
+    total = sum(_shape_bytes(d, s) for d, s in _SHAPE.findall(seg))
+    if "-start(" in line:
+        # async start ops carry (operand, result) tuples; halve
+        total //= 2
+    return total
+
+
+def _trip_count(cond_lines: list[str], while_line: str) -> int:
+    m = _TRIP.search(while_line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for line in cond_lines:
+        for c in _CONST_INT.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def parse_collectives(hlo_text: str) -> CollectiveReport:
+    comps = split_computations(hlo_text)
+    rep = CollectiveReport()
+
+    # ---- call-graph edges with per-edge multipliers
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            wm = _WHILE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = _trip_count(comps.get(cond, []), line)
+                rep.trip_counts[body] = trip
+                edges[name].append((body, trip))
+                edges[name].append((cond, trip + 1))
+                continue
+            for m in _CALLS.finditer(line):
+                for callee in re.split(r",\s*", m.group(1)):
+                    callee = callee.lstrip("%")
+                    if callee in comps:
+                        edges[name].append((callee, 1))
+
+    # ---- multipliers from the entry computation (memoized recursion over
+    # the reverse call graph; HLO computations cannot recurse)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.replace("ENTRY", "").strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        entry = next(iter(comps), None)
+    rev: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for caller, outs in edges.items():
+        for callee, k in outs:
+            rev[callee].append((caller, k))
+
+    memo: dict[str, int] = {}
+
+    def multiplier(c: str, _depth=0) -> int:
+        if c == entry:
+            return 1
+        if c in memo:
+            return memo[c]
+        if _depth > 200:
+            return 1
+        memo[c] = 0                       # cycle guard (shouldn't happen)
+        total = sum(multiplier(caller, _depth + 1) * k
+                    for caller, k in rev.get(c, []))
+        memo[c] = total
+        return total
+
+    mult = {name: multiplier(name) for name in comps}
+
+    # ---- collect collective bytes weighted by multiplier.  Physical link
+    # traffic: an all-reduce moves ~2x its payload (reduce-scatter +
+    # all-gather phases); the others ~1x ((n-1)/n ~= 1).
+    phys = {"all-reduce": 2.0}
+    for name, lines in comps.items():
+        w = max(1, mult.get(name, 1))
+        for line in lines:
+            if "-done(" in line:
+                continue
+            m = _OPNAME.search(line)
+            if not m:
+                continue
+            kind = m.group(1)
+            b = _line_result_bytes(line, m) * phys.get(kind, 1.0)
+            if "_promoted" in line or ("f32[" in line
+                                       and "(%convert" in line):
+                # XLA-CPU artifact: the CPU float-normalization pass
+                # rewrites bf16 compute (and collectives) as
+                # convert->f32-op->convert; a TPU moves bf16, so halve.
+                # Detected via the promoted reducer name or a convert-
+                # producing operand.
+                b /= 2
+            rep.bytes_by_kind[kind] += int(b) * w
+            rep.count_by_kind[kind] += w
+            rep.static_count[kind] += 1
+    return rep

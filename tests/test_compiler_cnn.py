@@ -1,0 +1,171 @@
+"""Compiler pipeline tests: grouping, allocation, ISA round-trip, and
+simulator-vs-JAX-reference numerical equality + DRAM model cross-check."""
+import numpy as np
+import pytest
+
+from repro.cnn import build_cnn
+from repro.cnn.jax_ref import init_params, run_graph
+from repro.core.allocator import allocate
+from repro.core.compiler import all_frame_policy, all_row_policy, compile_graph
+from repro.core.dram import baseline_total, dram_report
+from repro.core.grouping import group_nodes
+from repro.core.hw import KCU1500
+from repro.core.ir import Graph, make_input
+from repro.core.isa import decode_stream, encode_stream, generate_instructions
+from repro.core.simulator import simulate
+
+
+def tiny_resnet(input_size=32) -> Graph:
+    """Small residual CNN exercising conv/pool/add/SE/upsample/concat."""
+    g = Graph("tiny")
+    make_input(g, input_size, input_size)
+    g.add("conv", out_ch=8, k=3, stride=2, act="relu")
+    entry = g.nodes[-1]
+    g.add("conv", out_ch=8, k=1, act="relu")
+    g.add("conv", out_ch=8, k=3, act="linear")
+    g.add("add", inputs=[len(g.nodes) - 1, entry.idx])
+    skip = g.nodes[-1]
+    # SE side path
+    g.add("dwconv", k=3, act="swish")
+    dw = g.nodes[-1]
+    g.add("globalpool", inputs=[dw.idx])
+    g.add("fc", out_ch=4, in_ch=8, in_h=1, in_w=1, out_h=1, out_w=1,
+          act="swish")
+    se = g.add("fc", out_ch=8, in_ch=4, in_h=1, in_w=1, out_h=1, out_w=1,
+               act="sigmoid")
+    g.add("scale", inputs=[dw.idx, se.idx])
+    g.add("conv", out_ch=16, k=1, act="relu")
+    g.add("maxpool", k=2, stride=2)
+    g.add("upsample", stride=2)
+    g.add("concat", inputs=[len(g.nodes) - 1, skip.idx])
+    g.add("conv", out_ch=8, k=3, act="relu")
+    g.validate()
+    return g
+
+
+ALL_CNNS = ["vgg16-conv", "yolov2", "yolov3", "resnet50", "resnet152",
+            "efficientnet-b1", "retinanet", "mobilenet-v3"]
+
+
+@pytest.mark.parametrize("name", ALL_CNNS)
+def test_zoo_builds_and_validates(name):
+    g = build_cnn(name)
+    assert len(g) > 10
+    assert g.total_macs() > 0
+    assert g.total_weight_bytes() > 0
+
+
+def test_efficientnet_group_count_matches_paper():
+    gg = group_nodes(build_cnn("efficientnet-b1", 256))
+    assert len(gg.groups) == 139          # paper Fig. 5(a): 139 groups
+
+
+def test_allocator_three_buffers_suffice_for_residual_chain():
+    g = build_cnn("resnet50", 224)
+    gg = group_nodes(g)
+    alloc = allocate(gg, all_frame_policy(gg))
+    # ResNet has no long-path data: nothing may spill.
+    assert not alloc.spilled
+    assert all(b > 0 for b in alloc.buff)
+
+
+def test_allocator_no_liveness_clobber():
+    """No group may write its output into a buffer holding a still-live
+    shortcut tensor (the core invariant of Algorithm 1)."""
+    for name in ["resnet50", "efficientnet-b1", "yolov3"]:
+        g = build_cnn(name)
+        gg = group_nodes(g)
+        alloc = allocate(gg, all_frame_policy(gg))
+        live: dict[int, int] = {}
+        remaining = {gi.gid: len(gg.group_consumers(gi)) for gi in gg.groups}
+        for gr in gg.groups:
+            for src in gg.group_inputs(gr):
+                if src >= 0:
+                    remaining[src] -= 1
+            if gr.gid in alloc.alloc_out:
+                b = alloc.alloc_out[gr.gid]
+                if b in live:
+                    owner = live[b]
+                    assert remaining.get(owner, 0) <= 0, (
+                        f"{name}: group {gr.gid} clobbers live tensor of "
+                        f"group {owner} in buffer {b}")
+                live[b] = gr.gid
+
+
+def test_instruction_roundtrip():
+    g = build_cnn("yolov3")
+    gg = group_nodes(g)
+    alloc = allocate(gg, all_row_policy(gg))
+    ins = generate_instructions(gg, alloc)
+    stream = encode_stream(ins)
+    dec = decode_stream(stream)
+    assert len(dec) == len(ins)
+    for a, b in zip(ins, dec):
+        assert a == b
+
+
+@pytest.mark.parametrize("policy_fn", [all_row_policy, all_frame_policy])
+def test_simulator_matches_jax_reference(policy_fn):
+    g = tiny_resnet()
+    gg = group_nodes(g)
+    alloc = allocate(gg, policy_fn(gg))
+    ins = generate_instructions(gg, alloc)
+    params = init_params(g)
+    x = np.random.default_rng(1).standard_normal(
+        (1, 32, 32, 3), dtype=np.float32)
+    ref = run_graph(g, params, x)
+    out, counters = simulate(gg, alloc, ins, params, x, execute=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref[len(g.nodes) - 1]),
+                               rtol=1e-5, atol=1e-5)
+    assert counters.weight_reads == g.total_weight_bytes()
+
+
+def test_simulator_matches_optimized_plan():
+    g = tiny_resnet(64)
+    plan = compile_graph(g)
+    params = init_params(g)
+    x = np.random.default_rng(2).standard_normal(
+        (1, 64, 64, 3), dtype=np.float32)
+    ref = run_graph(g, params, x)
+    out, counters = simulate(plan.grouped, plan.alloc, plan.instructions,
+                             params, x, execute=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref[len(g.nodes) - 1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name,size", [("resnet50", 224), ("yolov3", 416),
+                                       ("efficientnet-b1", 256)])
+def test_dram_model_matches_simulator_traffic(name, size):
+    """Analytical eq. (8)/(9) must equal the byte counters of the memory
+    simulator for the optimizer's chosen plan (dry mode: no tensors)."""
+    g = build_cnn(name, size)
+    plan = compile_graph(g)
+    _, counters = simulate(plan.grouped, plan.alloc, plan.instructions,
+                           execute=False)
+    assert counters.weight_reads == plan.dram.weight_bytes
+    assert counters.fm_total == plan.dram.fm_bytes, (
+        f"{name}: simulator {counters.fm_total} vs model {plan.dram.fm_bytes}")
+
+
+def test_frame_mode_beats_row_mode_on_dram():
+    g = build_cnn("resnet50", 224)
+    gg = group_nodes(g)
+    row = dram_report(gg, allocate(gg, all_row_policy(gg)))
+    frame = dram_report(gg, allocate(gg, all_frame_policy(gg)))
+    assert frame.fm_bytes < 0.05 * row.fm_bytes
+
+
+def test_optimizer_reduces_dram_vs_baseline():
+    for name, size, lo, hi in [("resnet50", 256, 0.45, 0.9),
+                               ("efficientnet-b1", 256, 0.6, 0.95)]:
+        plan = compile_graph(build_cnn(name, size))
+        red = plan.offchip_reduction
+        assert lo <= red <= hi, f"{name}: reduction {red}"
+        assert plan.candidate.feasible
+
+
+def test_baseline_larger_than_weights():
+    gg = group_nodes(build_cnn("resnet152", 256))
+    assert baseline_total(gg) > gg.graph.total_weight_bytes()

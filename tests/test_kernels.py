@@ -1,0 +1,204 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes/dtypes (+ hypothesis fuzzing of block shapes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_block import fused_block
+from repro.kernels.ref import (flash_attention_ref, fused_block_ref,
+                               ssd_scan_ref)
+from repro.kernels.ssd_scan import ssd_scan
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rnd(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(jax.random.key(key), shape)).astype(
+        dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ------------------------------------------------------------- fused block
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,d,f,bm,bf", [
+    (64, 128, 256, 32, 128),
+    (128, 96, 384, 64, 96),
+    (256, 64, 128, 256, 128),
+])
+@pytest.mark.parametrize("gated,act,sandwich", [
+    (True, "silu", False), (True, "gelu", True), (False, "gelu", False),
+])
+def test_fused_block_matches_ref(dtype, m, d, f, bm, bf, gated, act,
+                                 sandwich):
+    x = rnd(0, (m, d), dtype)
+    scale = rnd(1, (d,), jnp.float32, 0.1)
+    post = rnd(5, (d,), jnp.float32, 0.1)
+    wg = rnd(2, (d, f), dtype, d ** -0.5)
+    wu = rnd(3, (d, f), dtype, d ** -0.5)
+    wd = rnd(4, (f, d), dtype, f ** -0.5)
+    out = fused_block(x, scale, wg, wu, wd, post, act=act, gated=gated,
+                      sandwich=sandwich, block_m=bm, block_f=bf,
+                      interpret=True)
+    ref = fused_block_ref(x, scale, wg, wu, wd, post, act=act, gated=gated,
+                          sandwich=sandwich)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@settings(max_examples=12, deadline=None)
+@given(n_m=st.integers(1, 4), n_f=st.integers(1, 4),
+       bm=st.sampled_from([16, 32, 64]), bf=st.sampled_from([64, 128]))
+def test_fused_block_block_shape_sweep(n_m, n_f, bm, bf):
+    """Property: result is independent of the VMEM tiling."""
+    d = 64
+    m, f = n_m * bm, n_f * bf
+    x = rnd(10, (m, d))
+    scale = rnd(11, (d,), scale=0.1)
+    wg = rnd(12, (d, f), scale=d ** -0.5)
+    wu = rnd(13, (d, f), scale=d ** -0.5)
+    wd = rnd(14, (f, d), scale=f ** -0.5)
+    out = fused_block(x, scale, wg, wu, wd, block_m=bm, block_f=bf,
+                      interpret=True)
+    ref = fused_block_ref(x, scale, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,T,NH,NKV,hd,bq,bk", [
+    (2, 128, 128, 4, 2, 32, 64, 64),       # GQA causal
+    (1, 64, 64, 2, 1, 64, 32, 32),         # MQA
+    (2, 128, 128, 2, 2, 16, 128, 32),
+])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 32, 0.0), (True, 0, 50.0), (False, 0, 0.0),
+])
+def test_flash_matches_ref(dtype, B, S, T, NH, NKV, hd, bq, bk,
+                           causal, window, softcap):
+    q = rnd(0, (B, S, NH, hd), dtype)
+    k = rnd(1, (B, T, NKV, hd), dtype)
+    v = rnd(2, (B, T, NKV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_flash_matches_model_blocked_attention():
+    """The Pallas kernel, the jnp oracle and the model's blocked_attention
+    must agree."""
+    from repro.models.attention import blocked_attention
+    q = rnd(0, (2, 128, 4, 32))
+    k = rnd(1, (2, 128, 2, 32))
+    v = rnd(2, (2, 128, 2, 32))
+    a = flash_attention(q, k, v, causal=True, interpret=True)
+    b = blocked_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bq=st.sampled_from([16, 32, 64, 128]),
+       bk=st.sampled_from([16, 32, 64, 128]),
+       window=st.sampled_from([0, 16, 48]))
+def test_flash_block_shape_sweep(bq, bk, window):
+    q = rnd(20, (1, 128, 2, 32))
+    k = rnd(21, (1, 128, 2, 32))
+    v = rnd(22, (1, 128, 2, 32))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------- SSD
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BH,S,P,N,G,chunk", [
+    (4, 64, 16, 8, 1, 16),
+    (6, 128, 8, 16, 2, 32),
+    (2, 32, 32, 32, 1, 32),
+])
+def test_ssd_scan_matches_sequential_ref(dtype, BH, S, P, N, G, chunk):
+    BG = G * 1                              # one batch row per group here
+    hg = BH // BG
+    x = rnd(0, (BH, S, P), dtype)
+    dt = jax.nn.softplus(rnd(1, (BH, S))).astype(jnp.float32)
+    A = -jnp.exp(rnd(2, (BH, 1), scale=0.2)).astype(jnp.float32)
+    D = rnd(3, (BH, 1)).astype(jnp.float32)
+    Bm = rnd(4, (BG, S, N), dtype)
+    Cm = rnd(5, (BG, S, N), dtype)
+    out = ssd_scan(x, dt, A, D, Bm, Cm, chunk=chunk, nheads=hg,
+                   interpret=True)
+    ref = ssd_scan_ref(x, dt, A, D, Bm, Cm)
+    tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 \
+        else dict(rtol=4e-2, atol=4e-2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+def test_ssd_kernel_matches_model_chunked():
+    """Kernel vs the model's lax.scan SSD (models/mamba2.ssd_chunked)."""
+    from repro.models.mamba2 import ssd_chunked
+    b, s, h, p, n = 2, 64, 4, 8, 16
+    x = rnd(0, (b, s, h, p))
+    dt = jax.nn.softplus(rnd(1, (b, s, h))).astype(jnp.float32)
+    A = -jnp.exp(rnd(2, (h,), scale=0.2)).astype(jnp.float32)
+    D = rnd(3, (h,)).astype(jnp.float32)
+    Bm = rnd(4, (b, s, 1, n))
+    Cm = rnd(5, (b, s, 1, n))
+    y_model, _ = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=16)
+
+    xk = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtk = dt.transpose(0, 2, 1).reshape(b * h, s)
+    Ak = jnp.tile(A[None, :], (b, 1)).reshape(b * h, 1)
+    Dk = jnp.tile(D[None, :], (b, 1)).reshape(b * h, 1)
+    Bk = Bm[:, :, 0, :]
+    Ck = Cm[:, :, 0, :]
+    y_kern = ssd_scan(xk, dtk, Ak, Dk, Bk, Ck, chunk=16, nheads=h,
+                      interpret=True)
+    y_kern = y_kern.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_model),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ RG-LRU
+@pytest.mark.parametrize("B,S,W,q,bw", [
+    (2, 64, 32, 16, 32), (1, 128, 64, 64, 32), (3, 32, 16, 32, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_kernel_matches_model_scan(B, S, W, q, bw, dtype):
+    from repro.kernels.rglru_scan import rglru_scan_kernel
+    from repro.models.rglru import rglru_scan
+    a = jax.nn.sigmoid(rnd(0, (B, S, W))).astype(dtype)
+    b = rnd(1, (B, S, W), dtype)
+    ref = rglru_scan(a.astype(jnp.float32), b.astype(jnp.float32))
+    out = rglru_scan_kernel(a, b, chunk=q, block_w=bw, interpret=True)
+    tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 \
+        else dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(q=st.sampled_from([8, 16, 32]), bw=st.sampled_from([16, 32]))
+def test_rglru_kernel_block_sweep(q, bw):
+    from repro.kernels.rglru_scan import rglru_scan_kernel
+    from repro.models.rglru import rglru_scan
+    a = jax.nn.sigmoid(rnd(5, (2, 64, 32)))
+    b = rnd(6, (2, 64, 32))
+    out = rglru_scan_kernel(a, b, chunk=q, block_w=bw, interpret=True)
+    ref = rglru_scan(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

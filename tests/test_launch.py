@@ -1,0 +1,121 @@
+"""Launch-layer tests: sharding plans, HLO parsing, and a subprocess
+dry-run of one real cell per plan kind (the 512-device env var must be set
+before jax initializes, hence subprocess)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.utils.hlo import parse_collectives
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+        self.size = 1
+        for v in shape.values():
+            self.size *= v
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+
+
+def test_plan_kinds():
+    from repro.launch.sharding import make_plan
+    assert make_plan(get_config("gemma2-27b"), MESH1).kind == "tp"
+    assert make_plan(get_config("qwen3-moe-235b-a22b"), MESH1).kind == "tp"
+    # heads (8/15/10) indivisible by 16 -> hybrid
+    for arch in ("gemma2-2b", "smollm-360m", "recurrentgemma-2b",
+                 "whisper-base"):
+        plan = make_plan(get_config(arch), MESH1)
+        assert plan.kind == "hybrid", arch
+        assert plan.rules["heads"] is None
+    # mamba2 is attention-free -> tp
+    assert make_plan(get_config("mamba2-2.7b"), MESH1).kind == "tp"
+
+
+def test_plan_divisibility_never_violated():
+    from repro.launch.sharding import make_plan
+    for name, cfg in ARCHS.items():
+        plan = make_plan(cfg, MESH1)
+        if plan.rules.get("heads") == "model":
+            assert cfg.n_heads % 16 == 0, name
+        if plan.rules.get("kv") == "model":
+            assert cfg.n_kv_heads % 16 == 0, name
+        if plan.rules.get("experts") == "model":
+            assert cfg.n_experts % 16 == 0, name
+        if plan.rules.get("vocab") == "model":
+            assert cfg.vocab % 16 == 0, name
+
+
+def test_batch_spec_fallbacks():
+    from repro.launch.sharding import make_plan
+    plan = make_plan(get_config("gemma2-27b"), MESH1)
+
+    class M(FakeMesh):
+        pass
+
+    m = M({"data": 16, "model": 16})
+    assert tuple(plan.batch_spec(m, 256)) != ()       # divides data
+    assert tuple(plan.batch_spec(m, 1)) == ()         # replicated
+
+
+def test_hlo_parser_trip_counts_and_bytes():
+    hlo = """HloModule test, is_scheduled=true
+
+%body.1 (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %ar = f32[8,128]{1,0} all-reduce(%x), to_apply=%add.1
+}
+
+%cond.1 (p: (s32[], f32[8,128])) -> pred[] {
+  %c = s32[] constant(12)
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %w = (s32[], f32[8,128]) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+  %ag = f32[128,128]{1,0} all-gather(%y), dimensions={0}
+}
+"""
+    rep = parse_collectives(hlo)
+    # all-reduce: 8*128*4 bytes * 2 (physical) * 12 (trip count)
+    assert rep.bytes_by_kind["all-reduce"] == 8 * 128 * 4 * 2 * 12
+    assert rep.bytes_by_kind["all-gather"] == 128 * 128 * 4
+    assert rep.trip_counts.get("body.1") == 12
+
+
+def test_costmodel_sane():
+    from repro.configs import SHAPES
+    from repro.utils.costmodel import attention_fraction, cell_cost
+    cfg = get_config("gemma2-27b")
+    cc = cell_cost(cfg, SHAPES["train_4k"], 256)
+    # 6*N*D within 2x of the analytic total (remat factor + attention)
+    n = cfg.param_count()
+    d = 4096 * 256
+    assert 0.8 * 6 * n * d < cc.flops < 3.0 * 6 * n * d
+    af = attention_fraction(cfg, 4096, 2048, "train")
+    assert 0.05 < af < 0.6
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_one_cell(tmp_path):
+    """End-to-end launch check: one real cell lowers+compiles under the
+    production mesh in a fresh interpreter (XLA_FLAGS must precede jax
+    init)."""
+    out = tmp_path / "dry"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-base", "--shape", "train_4k", "--out", str(out)],
+        capture_output=True, text=True, timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        cwd=Path(__file__).parent.parent)
+    assert "[OK]" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+    data = json.loads((out / "whisper-base_train_4k_pod1.json").read_text())
+    assert data["ok"] and data["fits_hbm"]
+    assert data["chips"] == 256
+    assert data["collectives"]["total_bytes"] > 0

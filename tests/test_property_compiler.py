@@ -1,0 +1,93 @@
+"""Property-based tests (hypothesis): the analytical DRAM model must match
+the instruction-stream simulator for RANDOM residual CNNs under RANDOM
+reuse policies, and the allocator must never clobber live tensors."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocator import allocate
+from repro.core.dram import dram_report
+from repro.core.grouping import group_nodes
+from repro.core.ir import Graph, make_input
+from repro.core.isa import generate_instructions
+from repro.core.simulator import simulate
+
+
+@st.composite
+def random_cnn(draw):
+    """Sequential conv chain with random residual adds and pools."""
+    g = Graph("prop")
+    size = draw(st.sampled_from([32, 64]))
+    make_input(g, size, size)
+    n_blocks = draw(st.integers(2, 7))
+    ch = draw(st.sampled_from([8, 16]))
+    g.add("conv", out_ch=ch, k=3, act="relu")
+    for _ in range(n_blocks):
+        kind = draw(st.sampled_from(["plain", "residual", "pool"]))
+        if kind == "plain":
+            g.add("conv", out_ch=ch, k=draw(st.sampled_from([1, 3])),
+                  act="relu")
+        elif kind == "pool":
+            if g.nodes[-1].out_h >= 4:
+                g.add("maxpool", k=2, stride=2)
+        else:
+            entry = g.nodes[-1]
+            g.add("conv", out_ch=ch, k=1, act="relu")
+            g.add("conv", out_ch=ch, k=3, act="linear")
+            g.add("add", inputs=[len(g.nodes) - 1, entry.idx])
+    g.validate()
+    return g
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=random_cnn(), seed=st.integers(0, 999))
+def test_dram_model_equals_simulator_on_random_graphs(g, seed):
+    gg = group_nodes(g)
+    rng = np.random.default_rng(seed)
+    policy = {gr.gid: ("row" if rng.random() < 0.5 else "frame")
+              for gr in gg.groups}
+    alloc = allocate(gg, policy)
+    ins = generate_instructions(gg, alloc)
+    _, counters = simulate(gg, alloc, ins, execute=False)
+    rep = dram_report(gg, alloc)
+    assert counters.fm_total == rep.fm_bytes
+    assert counters.weight_reads == rep.weight_bytes
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=random_cnn())
+def test_allocator_never_clobbers_live_tensors(g):
+    gg = group_nodes(g)
+    alloc = allocate(gg, {gr.gid: "frame" for gr in gg.groups})
+    remaining = {gr.gid: len(gg.group_consumers(gr)) for gr in gg.groups}
+    live: dict[int, int] = {}
+    for gr in gg.groups:
+        for src in gg.group_inputs(gr):
+            if src >= 0:
+                remaining[src] -= 1
+        if gr.gid in alloc.alloc_out:
+            b = alloc.alloc_out[gr.gid]
+            if b in live:
+                assert remaining.get(live[b], 0) <= 0, \
+                    f"group {gr.gid} clobbers live group {live[b]}"
+            live[b] = gr.gid
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=random_cnn(), seed=st.integers(0, 99))
+def test_simulator_numerics_on_random_graphs(g, seed):
+    """Random policy execution must equal the direct JAX reference."""
+    from repro.cnn.jax_ref import init_params, run_graph
+    gg = group_nodes(g)
+    rng = np.random.default_rng(seed)
+    policy = {gr.gid: ("row" if rng.random() < 0.5 else "frame")
+              for gr in gg.groups}
+    alloc = allocate(gg, policy)
+    ins = generate_instructions(gg, alloc)
+    params = init_params(g, seed)
+    size = g.nodes[0].out_h
+    x = rng.standard_normal((1, size, size, 3), dtype=np.float32)
+    out, _ = simulate(gg, alloc, ins, params, x, execute=True)
+    ref = run_graph(g, params, x)[len(g.nodes) - 1]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
