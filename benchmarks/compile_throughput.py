@@ -1,0 +1,144 @@
+"""Compiler-throughput benchmark: incremental engine vs direct evaluator.
+
+For every CNN-zoo network, measures
+  * candidate evaluations/sec of the direct oracle (``cutpoint.evaluate``:
+    full allocate + whole-graph reports per tuple, the seed inner loop),
+  * candidate evaluations/sec of :class:`CutpointEngine` over the same
+    product-order enumeration the exhaustive search walks,
+  * end-to-end ``compile_graph`` wall time,
+and writes ``BENCH_compile.json`` (schema below).  The engine numbers are
+only meaningful because the engine is oracle-exact -- equivalence is
+enforced by tests/test_cutpoint_engine.py and spot-checked here.
+
+Usage:
+    PYTHONPATH=src python benchmarks/compile_throughput.py [--smoke] [-o F]
+
+``--smoke`` runs two small networks with short budgets and asserts the
+engine/oracle agreement instead of writing the JSON (CI regression gate).
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.cnn import build_cnn                                  # noqa: E402
+from repro.core.compiler import compile_graph                    # noqa: E402
+from repro.core.cutpoint import (CutpointEngine, evaluate,       # noqa: E402
+                                 monotone_runs, split_blocks)
+from repro.core.grouping import group_nodes                      # noqa: E402
+from repro.core.hw import KCU1500                                # noqa: E402
+
+ZOO = [("vgg16-conv", 224), ("yolov2", 416), ("yolov3", 416),
+       ("resnet50", 224), ("resnet152", 224), ("efficientnet-b1", 256),
+       ("retinanet", 512), ("mobilenet-v3", 224)]
+SMOKE_ZOO = [("vgg16-conv", 224), ("resnet50", 224)]
+
+METRICS = ["latency_cycles", "dram_total", "dram_fm", "sram_total",
+           "bram18k", "feasible"]
+
+
+def _product_tuples(runs):
+    return itertools.product(*[range(len(r) + 1) for r in runs])
+
+
+def bench_network(name: str, size: int, budget_s: float,
+                  check_equiv: bool = False) -> dict:
+    gg = group_nodes(build_cnn(name, size))
+    blocks = split_blocks(gg)
+    runs = monotone_runs(blocks)
+    space = 1
+    for r in runs:
+        space *= len(r) + 1
+
+    # direct oracle throughput
+    n_direct = 0
+    t0 = time.perf_counter()
+    for cuts in _product_tuples(runs):
+        evaluate(gg, blocks, runs, cuts, KCU1500)
+        n_direct += 1
+        if time.perf_counter() - t0 > budget_s:
+            break
+    direct_eps = n_direct / (time.perf_counter() - t0)
+
+    # incremental engine throughput over the same enumeration order
+    engine = CutpointEngine(gg, KCU1500, blocks, runs)
+    n_engine = 0
+    t0 = time.perf_counter()
+    for cuts in _product_tuples(runs):
+        engine.evaluate(cuts, memoize=False)    # as the exhaustive search does
+        n_engine += 1
+        if n_engine % 256 == 0 and time.perf_counter() - t0 > budget_s:
+            break
+    engine_eps = n_engine / (time.perf_counter() - t0)
+
+    if check_equiv:
+        fresh = CutpointEngine(gg, KCU1500, blocks, runs)
+        for cuts in itertools.islice(_product_tuples(runs), 10):
+            o = evaluate(gg, blocks, runs, cuts, KCU1500)
+            m = fresh.evaluate(cuts)
+            for f in METRICS:
+                assert getattr(o, f) == getattr(m, f), (name, cuts, f)
+
+    # end-to-end compile (grouping + search + instruction generation)
+    graph = build_cnn(name, size)
+    t0 = time.perf_counter()
+    plan = compile_graph(graph, KCU1500)
+    compile_s = time.perf_counter() - t0
+
+    row = {
+        "groups": len(gg.groups), "blocks": len(blocks), "runs": len(runs),
+        "search_space": space,
+        "direct_evals_per_sec": round(direct_eps, 1),
+        "engine_evals_per_sec": round(engine_eps, 1),
+        "speedup": round(engine_eps / direct_eps, 2),
+        "compile_wall_s": round(compile_s, 3),
+        "search_evaluations": plan.search.evaluated if plan.search else 0,
+    }
+    print(f"{name}: space={space} direct={direct_eps:.0f}/s "
+          f"engine={engine_eps:.0f}/s speedup={row['speedup']}x "
+          f"compile={compile_s:.2f}s")
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short CI run: 2 networks, equivalence asserted, "
+                         "no JSON written")
+    ap.add_argument("-o", "--output", default="BENCH_compile.json")
+    args = ap.parse_args()
+
+    zoo = SMOKE_ZOO if args.smoke else ZOO
+    budget = 0.4 if args.smoke else 3.0
+    results = {}
+    for name, size in zoo:
+        results[f"{name}@{size}"] = bench_network(
+            name, size, budget, check_equiv=args.smoke)
+
+    if args.smoke:
+        worst = min(r["speedup"] for r in results.values())
+        # regression gate: the engine must stay clearly ahead of the direct
+        # oracle even on small graphs / loaded CI machines (real margin on
+        # an idle machine is 3-20x)
+        assert worst > 1.5, f"engine speedup regressed to {worst}x"
+        print(f"smoke OK: min speedup {worst}x")
+        return
+
+    payload = {
+        "hw": KCU1500.name,
+        "note": "evals/sec over product-order cut enumeration; engine is "
+                "oracle-exact (tests/test_cutpoint_engine.py)",
+        "networks": results,
+    }
+    Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {args.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Figs 16/17.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 
 from repro.cnn import build_cnn
 from repro.core.compiler import all_row_policy, compile_graph
@@ -15,6 +16,13 @@ from repro.core.grouping import group_nodes
 from repro.core.hw import KCU1500
 
 MB = 1 << 20
+
+
+@lru_cache(maxsize=None)
+def _plan(name: str, size: int, objective: str = "latency"):
+    """Memoized compile: several tables hit the same (network, objective)
+    pair, and plans are immutable once built."""
+    return compile_graph(build_cnn(name, size), KCU1500, objective=objective)
 
 
 @dataclass
@@ -56,8 +64,7 @@ def table3_min_buffers() -> list[Row]:
              ("efficientnet-b1", 256, 0.43)]
     rows = []
     for name, size, paper in cases:
-        plan = compile_graph(build_cnn(name, size), KCU1500,
-                             objective="sram")
+        plan = _plan(name, size, objective="sram")
         rows.append(Row("tableIII", name, "min_buffer_mb",
                         round(plan.sram.sram_total / MB, 3), paper))
     return rows
@@ -65,8 +72,7 @@ def table3_min_buffers() -> list[Row]:
 
 def table4_vgg() -> list[Row]:
     """Table IV: VGG-CONV buffer size / DRAM access vs prior work."""
-    plan = compile_graph(build_cnn("vgg16-conv", 224), KCU1500,
-                         objective="sram")
+    plan = _plan("vgg16-conv", 224, objective="sram")
     return [
         Row("tableIV", "vgg16-conv", "sram_mb",
             round(plan.sram.sram_total / MB, 3), 0.712),
@@ -95,7 +101,7 @@ def table5_cnn_performance() -> list[Row]:
     ]
     rows = []
     for name, size, paper in cases:
-        plan = compile_graph(build_cnn(name, size), KCU1500)
+        plan = _plan(name, size)
         rows += [
             Row("tableV", name, "latency_ms", round(plan.latency_ms, 2),
                 paper["latency_ms"]),
@@ -117,7 +123,7 @@ def table7_efficientnet_scaling() -> list[Row]:
              768: dict(fm_mb=344.0, total_mb=475.0, red=27.6)}
     rows = []
     for size, p in paper.items():
-        plan = compile_graph(build_cnn("efficientnet-b1", size), KCU1500)
+        plan = _plan("efficientnet-b1", size)
         rows += [
             Row("tableVII", f"efficientnet-b1@{size}", "offchip_fm_mb",
                 round(plan.dram.fm_bytes / MB, 2), p["fm_mb"]),
@@ -139,8 +145,7 @@ def fig16_yolov2_cutpoint_sweep() -> list[Row]:
     feas = [c for c in cands if c.feasible]
     best = min(feas, key=lambda c: c.latency_cycles)
     speedup = all_row.latency_cycles / best.latency_cycles
-    from repro.core.compiler import compile_graph as _cg
-    min_sram = _cg(g, KCU1500, objective="sram").sram.sram_total
+    min_sram = _plan("yolov2", 416, objective="sram").sram.sram_total
     return [
         Row("fig16", "yolov2", "speedup_vs_allrow", round(speedup, 2), 2.17),
         Row("fig16", "yolov2", "min_sram_mb",
@@ -172,9 +177,8 @@ def fig17_cutpoint_tradeoffs() -> list[Row]:
 def extra_mobilenetv3() -> list[Row]:
     """Beyond-paper: MobileNetV3-Large (the paper's Fig. 1 block) through
     the same optimizer -- no published numbers, ours recorded."""
-    plan = compile_graph(build_cnn("mobilenet-v3", 224), KCU1500)
-    plan_min = compile_graph(build_cnn("mobilenet-v3", 224), KCU1500,
-                             objective="sram")
+    plan = _plan("mobilenet-v3", 224)
+    plan_min = _plan("mobilenet-v3", 224, objective="sram")
     return [
         Row("extra", "mobilenet-v3", "latency_ms",
             round(plan.latency_ms, 2), None),

@@ -22,11 +22,17 @@ import json
 import threading
 from pathlib import Path
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:            # optional dep: fall back to stdlib zlib
+    zstandard = None
 
 
 def _flatten(tree):
@@ -60,15 +66,19 @@ def save(tree, directory: str | Path, step: int,
     final.mkdir(parents=True, exist_ok=True)
 
     named, _ = _flatten(tree)
-    comp = zstandard.ZstdCompressor(level=3)
-    manifest = {"step": step, "leaves": {}, "n_hosts": n_hosts}
+    if zstandard is not None:
+        codec, compress = "zstd", zstandard.ZstdCompressor(level=3).compress
+    else:
+        codec, compress = "zlib", (lambda b: zlib.compress(b, 3))
+    manifest = {"step": step, "leaves": {}, "n_hosts": n_hosts,
+                "codec": codec}
     payload = {}
     for name, leaf in named:
         arr = leaf
         shards = _host_shards(arr)
         entries = []
         for idx, data in shards:
-            blob = comp.compress(np.ascontiguousarray(data).tobytes())
+            blob = compress(np.ascontiguousarray(data).tobytes())
             key = f"{name}::{idx}"
             payload[key] = blob
             entries.append({
@@ -112,12 +122,33 @@ def restore(abstract_tree, directory: str | Path, step: int,
         raise FileNotFoundError(f"no committed checkpoint at {directory}")
     manifest = json.loads(
         (directory / f"MANIFEST_{host_id}.json").read_text())
-    dec = zstandard.ZstdDecompressor()
 
+    def decompressor(codec: str):
+        if codec == "zstd":
+            if zstandard is None:
+                raise RuntimeError(
+                    "checkpoint was written with zstd but zstandard is not "
+                    "installed")
+            return zstandard.ZstdDecompressor().decompress
+        return zlib.decompress
+
+    # Each host chose its codec independently (zstd, or the zlib fallback
+    # when zstandard is missing) and recorded it in its own manifest, so
+    # pair every host's blobs with that host's decompressor; decompression
+    # itself stays lazy (one shard at a time at the use site below).
     payload = {}
     for f in sorted(directory.glob("host_*.ckpt")):
+        hid = f.stem.split("_", 1)[1]
+        man_path = directory / f"MANIFEST_{hid}.json"
+        if not man_path.exists():
+            raise RuntimeError(
+                f"{f.name} present but {man_path.name} is missing -- "
+                f"host {hid}'s checkpoint write was incomplete")
+        host_codec = json.loads(man_path.read_text()).get("codec", "zstd")
+        decompress = decompressor(host_codec)
         with open(f, "rb") as fh:
-            payload.update(msgpack.unpackb(fh.read(), raw=False))
+            for key, blob in msgpack.unpackb(fh.read(), raw=False).items():
+                payload[key] = (blob, decompress)
 
     named, _ = _flatten(abstract_tree)
     flat_shard = None
@@ -129,11 +160,11 @@ def restore(abstract_tree, directory: str | Path, step: int,
         meta = manifest["leaves"][name]
         dtype = np.dtype(meta["dtype"])
         full = np.zeros(meta["global_shape"], dtype)
-        for key, blob in payload.items():
+        for key, (blob, decompress) in payload.items():
             if not key.startswith(name + "::"):
                 continue
             idx = eval(key.split("::", 1)[1])       # trusted local manifest
-            raw = dec.decompress(blob)
+            raw = decompress(blob)
             piece_shape = [stop - start for (start, stop) in idx] \
                 if idx else []
             piece = np.frombuffer(raw, dtype).reshape(piece_shape)

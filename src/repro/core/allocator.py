@@ -57,131 +57,211 @@ def _is_side(gg: GroupedGraph, g: Group) -> bool:
             and g.head.out_h == 1 and g.head.out_w == 1)
 
 
-def allocate(gg: GroupedGraph, policy: Policy) -> Allocation:
-    alloc = Allocation(policy=dict(policy))
+@dataclass
+class AllocState:
+    """Full sequential allocator state after processing a prefix of groups.
 
+    The allocator walks groups in gid order; everything it carries between
+    iterations lives here, so a snapshot taken at any group boundary can be
+    cloned and replayed forward (the cut-point engine checkpoints these at
+    monotone-run boundaries to make candidate evaluation incremental)."""
+    alloc: Allocation
+    # consumer counts not yet satisfied, per producing gid
+    remaining: dict[int, int]
+    # location of each produced tensor: buffer id, 'side', or 'dram'
+    location: dict[int, int | str]
+    # buffer id -> producing gid currently held live
+    live_in_buffer: dict[int, int]
+
+    def clone(self) -> "AllocState":
+        a = self.alloc
+        return AllocState(
+            alloc=Allocation(
+                policy=dict(a.policy),
+                alloc_in=dict(a.alloc_in), alloc_out=dict(a.alloc_out),
+                alloc_shortcut=dict(a.alloc_shortcut), buff=list(a.buff),
+                side_buff=a.side_buff, spilled=set(a.spilled),
+                boundary_writes=set(a.boundary_writes),
+                boundary_reads=dict(a.boundary_reads)),
+            remaining=dict(self.remaining),
+            location=dict(self.location),
+            live_in_buffer=dict(self.live_in_buffer))
+
+
+def init_alloc_state(gg: GroupedGraph) -> AllocState:
     # Consumer counts at group level (plus 1 virtual consumer for the final
     # network output so it is always written out).
-    consumers: dict[int, list[int]] = {g.gid: gg.group_consumers(g)
-                                       for g in gg.groups}
-    remaining = {gid: len(c) for gid, c in consumers.items()}
+    remaining = {g.gid: len(gg.group_consumers(g)) for g in gg.groups}
+    return AllocState(alloc=Allocation(policy={}), remaining=remaining,
+                      location={GRAPH_INPUT: "dram"}, live_in_buffer={})
 
-    # location of each produced tensor: buffer id, 'side', or 'dram'
-    location: dict[int, int | str] = {GRAPH_INPUT: "dram"}
-    live_in_buffer: dict[int, int] = {}          # buffer id -> producing gid
 
-    def free_buffer_for(exclude: set[int]) -> int | None:
-        for b in range(NUM_BUFFERS):
-            if b not in live_in_buffer and b not in exclude:
-                return b
-        return None
+@dataclass(frozen=True)
+class GroupStep:
+    """Static per-group facts consumed by the allocator loop body, resolved
+    once per graph so replays touch no Group/GroupedGraph objects."""
+    gid: int
+    is_side: bool
+    gin: tuple[int, ...]          # producing gids (main path first)
+    src_sizes: tuple[int, ...]    # out bytes of each gin source
+    sc_src: int | None
+    sc_size: int
+    in_size: int
+    out_size: int
 
-    def release_if_dead(gid: int) -> None:
-        if gid == GRAPH_INPUT or remaining.get(gid, 0) > 0:
+
+def graph_steps(gg: GroupedGraph) -> list[GroupStep]:
+    """Per-graph step table, cached on the GroupedGraph."""
+    steps = getattr(gg, "_alloc_steps", None)
+    if steps is not None:
+        return steps
+    input_size = gg.graph.nodes[0].out_size
+    steps = []
+    for g in gg.groups:
+        gin = tuple(gg.group_inputs(g))
+        sc_src = gg.shortcut_source_group(g)
+        steps.append(GroupStep(
+            gid=g.gid, is_side=_is_side(gg, g), gin=gin,
+            src_sizes=tuple(input_size if s == GRAPH_INPUT
+                            else gg.groups[s].out_size for s in gin),
+            sc_src=sc_src,
+            sc_size=gg.groups[sc_src].out_size if sc_src is not None else 0,
+            in_size=g.in_size, out_size=g.out_size))
+    gg._alloc_steps = steps
+    return steps
+
+
+def alloc_step(state: AllocState, step: GroupStep, mode: str) -> None:
+    """Process one group under ``mode``, advancing ``state`` in place.
+
+    This is the loop body of Algorithm 1; ``allocate`` applies it to every
+    group and the incremental search engine replays it from a checkpoint."""
+    alloc = state.alloc
+    remaining = state.remaining
+    location = state.location
+    live_in_buffer = state.live_in_buffer
+    gid = step.gid
+    gin = step.gin
+
+    def release_if_dead(src: int) -> None:
+        if src == GRAPH_INPUT or remaining.get(src, 0) > 0:
             return
-        loc = location.get(gid)
-        if isinstance(loc, int) and live_in_buffer.get(loc) == gid:
+        loc = location.get(src)
+        if isinstance(loc, int) and live_in_buffer.get(loc) == src:
             del live_in_buffer[loc]
 
-    for g in gg.groups:
-        mode = policy[g.gid]
-        gin = gg.group_inputs(g)
-        sc_src = gg.shortcut_source_group(g)
-
-        if _is_side(gg, g):
-            # SE side path: on-chip side space regardless of mode.
-            alloc.side_buff = max(alloc.side_buff, g.out_size)
-            location[g.gid] = "side"
-            for src in gin:
-                remaining[src] = remaining.get(src, 1) - 1
-                release_if_dead(src)
-            continue
-
-        if mode == "row":
-            # Feature maps stream through DRAM; no {0,1,2} assignment.
-            location[g.gid] = "dram"
-            for src in gin:
-                remaining[src] = remaining.get(src, 1) - 1
-                # A frame-produced tensor consumed by a row group must have
-                # been written to DRAM at the boundary.
-                if isinstance(location.get(src), int):
-                    alloc.boundary_writes.add(src)
-                release_if_dead(src)
-            continue
-
-        # ---------------------------------------------------- frame mode
-        in_buffers: set[int] = set()
-        read_bytes = 0
-        for src in gin:
-            loc = location.get(src, "dram")
-            if isinstance(loc, int):
-                in_buffers.add(loc)
-            elif loc == "dram":
-                # row->frame boundary (or spilled/long-path data): the
-                # group's input is fetched from DRAM into its input buffer.
-                src_size = (gg.graph.nodes[0].out_size if src == GRAPH_INPUT
-                            else gg.groups[src].out_size)
-                read_bytes += src_size
-        if read_bytes:
-            alloc.boundary_reads[g.gid] = (
-                alloc.boundary_reads.get(g.gid, 0) + read_bytes)
-
-        # Record alloc_in / alloc_shortcut from where the operands live.
-        main_src = gin[0] if gin else GRAPH_INPUT
-        main_loc = location.get(main_src, "dram")
-        if isinstance(main_loc, int):
-            alloc.alloc_in[g.gid] = main_loc
-            alloc.buff[main_loc] = max(alloc.buff[main_loc], g.in_size)
-        else:
-            b = free_buffer_for(set())
-            if b is not None:
-                alloc.alloc_in[g.gid] = b
-                alloc.buff[b] = max(alloc.buff[b], g.in_size)
-                # transient: the fetched input lives only during this group,
-                # but the output must not clobber it while it is being read.
-                in_buffers.add(b)
-        if sc_src is not None:
-            sloc = location.get(sc_src, "dram")
-            if isinstance(sloc, int):
-                alloc.alloc_shortcut[g.gid] = sloc
-                alloc.buff[sloc] = max(alloc.buff[sloc],
-                                       gg.groups[sc_src].out_size)
-
-        # Consume inputs (shortcut included -- group_inputs covers it).
+    if step.is_side:
+        # SE side path: on-chip side space regardless of mode.
+        if step.out_size > alloc.side_buff:
+            alloc.side_buff = step.out_size
+        location[gid] = "side"
         for src in gin:
             remaining[src] = remaining.get(src, 1) - 1
-
-        # Concat operands are long-path by definition: producers must have
-        # spilled (handled below when the producer ran) or be re-read.
-        if remaining.get(g.gid, 0) == 0:
-            # Final output: written straight to DRAM through the write
-            # buffer (eq. 5 final_layers term).
-            location[g.gid] = "dram"
-            alloc.boundary_writes.add(g.gid)
-        else:
-            exclude = set(in_buffers)
-            b = free_buffer_for(exclude)
-            if b is None:
-                # reuse the main input's buffer if the input dies here
-                if (isinstance(main_loc, int)
-                        and remaining.get(main_src, 0) == 0
-                        and live_in_buffer.get(main_loc) == main_src):
-                    del live_in_buffer[main_loc]
-                    b = main_loc
-            if b is None:
-                # Long-path data (paper §IV-A): spill to DRAM.
-                location[g.gid] = "dram"
-                alloc.spilled.add(g.gid)
-            else:
-                location[g.gid] = b
-                live_in_buffer[b] = g.gid
-                alloc.alloc_out[g.gid] = b
-                alloc.buff[b] = max(alloc.buff[b], g.out_size)
-
-        for src in gin:
             release_if_dead(src)
+        return
 
-    return alloc
+    if mode == "row":
+        # Feature maps stream through DRAM; no {0,1,2} assignment.
+        location[gid] = "dram"
+        for src in gin:
+            remaining[src] = remaining.get(src, 1) - 1
+            # A frame-produced tensor consumed by a row group must have
+            # been written to DRAM at the boundary.
+            if isinstance(location.get(src), int):
+                alloc.boundary_writes.add(src)
+            release_if_dead(src)
+        return
+
+    # ---------------------------------------------------- frame mode
+    in_buffers: set[int] = set()
+    read_bytes = 0
+    for src, src_size in zip(gin, step.src_sizes):
+        loc = location.get(src, "dram")
+        if isinstance(loc, int):
+            in_buffers.add(loc)
+        elif loc == "dram":
+            # row->frame boundary (or spilled/long-path data): the
+            # group's input is fetched from DRAM into its input buffer.
+            read_bytes += src_size
+    if read_bytes:
+        alloc.boundary_reads[gid] = (
+            alloc.boundary_reads.get(gid, 0) + read_bytes)
+
+    # Record alloc_in / alloc_shortcut from where the operands live.
+    main_src = gin[0] if gin else GRAPH_INPUT
+    main_loc = location.get(main_src, "dram")
+    buff = alloc.buff
+    if isinstance(main_loc, int):
+        alloc.alloc_in[gid] = main_loc
+        buff[main_loc] = max(buff[main_loc], step.in_size)
+    else:
+        b = next((i for i in range(NUM_BUFFERS)
+                  if i not in live_in_buffer), None)
+        if b is not None:
+            alloc.alloc_in[gid] = b
+            buff[b] = max(buff[b], step.in_size)
+            # transient: the fetched input lives only during this group,
+            # but the output must not clobber it while it is being read.
+            in_buffers.add(b)
+    if step.sc_src is not None:
+        sloc = location.get(step.sc_src, "dram")
+        if isinstance(sloc, int):
+            alloc.alloc_shortcut[gid] = sloc
+            buff[sloc] = max(buff[sloc], step.sc_size)
+
+    # Consume inputs (shortcut included -- group_inputs covers it).
+    for src in gin:
+        remaining[src] = remaining.get(src, 1) - 1
+
+    # Concat operands are long-path by definition: producers must have
+    # spilled (handled below when the producer ran) or be re-read.
+    if remaining.get(gid, 0) == 0:
+        # Final output: written straight to DRAM through the write
+        # buffer (eq. 5 final_layers term).
+        location[gid] = "dram"
+        alloc.boundary_writes.add(gid)
+    else:
+        b = next((i for i in range(NUM_BUFFERS)
+                  if i not in live_in_buffer and i not in in_buffers), None)
+        if b is None:
+            # reuse the main input's buffer if the input dies here
+            if (isinstance(main_loc, int)
+                    and remaining.get(main_src, 0) == 0
+                    and live_in_buffer.get(main_loc) == main_src):
+                del live_in_buffer[main_loc]
+                b = main_loc
+        if b is None:
+            # Long-path data (paper §IV-A): spill to DRAM.
+            location[gid] = "dram"
+            alloc.spilled.add(gid)
+        else:
+            location[gid] = b
+            live_in_buffer[b] = gid
+            alloc.alloc_out[gid] = b
+            buff[b] = max(buff[b], step.out_size)
+
+    for src in gin:
+        release_if_dead(src)
+
+
+def allocate(gg: GroupedGraph, policy: Policy) -> Allocation:
+    state = init_alloc_state(gg)
+    state.alloc.policy = dict(policy)
+    for step in graph_steps(gg):
+        alloc_step(state, step, policy[step.gid])
+    return state.alloc
+
+
+def spill_is_long_path(gg: GroupedGraph, gid: int,
+                       long_path_span: int = 8) -> bool:
+    """Whether a spill of ``gid``'s output is tolerable long-path data
+    (policy-independent, so the search engine precomputes it per gid)."""
+    g = gg.groups[gid]
+    cons = gg.group_consumers(g)
+    if any(gg.groups[c].kind in ("concat", "route") for c in cons):
+        return True
+    span = max((c - gid for c in cons), default=0)
+    return span > long_path_span
 
 
 def frame_feasible(gg: GroupedGraph, policy: Policy,
@@ -191,13 +271,5 @@ def frame_feasible(gg: GroupedGraph, policy: Policy,
     Spills are tolerated only for genuinely long-path data: concat/route
     operands and shortcut spans longer than ``long_path_span`` groups (the
     paper stores those off-chip by design)."""
-    for gid in alloc.spilled:
-        g = gg.groups[gid]
-        cons = gg.group_consumers(g)
-        long_path = any(gg.groups[c].kind in ("concat", "route") for c in cons)
-        if not long_path:
-            span = max((c - gid for c in cons), default=0)
-            long_path = span > long_path_span
-        if not long_path:
-            return False
-    return True
+    return all(spill_is_long_path(gg, gid, long_path_span)
+               for gid in alloc.spilled)

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core.allocator import Allocation, allocate
+from repro.core.allocator import Allocation, allocate, frame_feasible
 from repro.core.cutpoint import Candidate, SearchResult, search, sweep_single_cut
 from repro.core.dram import DRAMReport, baseline_total, dram_report
 from repro.core.grouping import GroupedGraph, group_nodes
@@ -80,20 +80,21 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
         alloc = cand.alloc
     else:
         alloc = allocate(gg, policy)
-        from repro.core.cutpoint import evaluate  # local to avoid cycle
+    sram = sram_report(gg, alloc, hw)
+    dram = dram_report(gg, alloc)
+    latency = latency_report(gg, alloc, hw)
+    if policy is not None:
+        feasible = (sram.sram_total <= hw.sram_budget
+                    and frame_feasible(gg, policy, alloc))
         cand = Candidate(
             cuts=(), policy=policy, alloc=alloc,
-            latency_cycles=latency_report(gg, alloc, hw).cycles,
-            dram_total=dram_report(gg, alloc).total,
-            dram_fm=dram_report(gg, alloc).fm_bytes,
-            sram_total=sram_report(gg, alloc, hw).sram_total,
-            bram18k=sram_report(gg, alloc, hw).bram18k,
-            feasible=True)
+            latency_cycles=latency.cycles,
+            dram_total=dram.total, dram_fm=dram.fm_bytes,
+            sram_total=sram.sram_total, bram18k=sram.bram18k,
+            feasible=feasible)
     return ExecutionPlan(
         graph=graph, grouped=gg, hw=hw, candidate=cand, alloc=alloc,
-        sram=sram_report(gg, alloc, hw),
-        dram=dram_report(gg, alloc),
-        latency=latency_report(gg, alloc, hw),
+        sram=sram, dram=dram, latency=latency,
         instructions=generate_instructions(gg, alloc),
         search=result)
 

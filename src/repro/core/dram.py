@@ -16,8 +16,10 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 from repro.core.allocator import Allocation, _is_side
-from repro.core.grouping import GroupedGraph
+from repro.core.grouping import Group, GroupedGraph
 
 
 @dataclass
@@ -35,6 +37,23 @@ class DRAMReport:
                 f"w={self.weight_bytes * mb:.2f} MB = {self.total * mb:.2f} MB")
 
 
+def row_fm_bytes(gg: GroupedGraph, g: Group) -> int:
+    """Row-mode DRAM feature-map traffic of one group (policy-independent)."""
+    if g.kind in ("concat", "route"):
+        # Feature-merging redirect (TensorRT-style, §III-A): the
+        # producers already wrote into the concat destination.
+        return 0
+    sc = gg.shortcut_source_group(g)
+    sc_bytes = gg.groups[sc].out_size if sc is not None else 0
+    fm = g.in_size + g.out_size + sc_bytes
+    if g.kind == "add" and g.head.kind == "add":
+        # standalone eltwise: in+out counted; second operand:
+        fm += sum(gg.groups[i].out_size
+                  for i in gg.group_inputs(g)[1:]
+                  if i >= 0)
+    return fm
+
+
 def dram_fm(gg: GroupedGraph, alloc: Allocation) -> int:
     policy = alloc.policy
     fm = 0
@@ -43,19 +62,7 @@ def dram_fm(gg: GroupedGraph, alloc: Allocation) -> int:
             continue                          # SE side path: on-chip always
         mode = policy[g.gid]
         if mode == "row":
-            if g.kind in ("concat", "route"):
-                # Feature-merging redirect (TensorRT-style, §III-A): the
-                # producers already wrote into the concat destination.
-                continue
-            sc = gg.shortcut_source_group(g)
-            sc_bytes = gg.groups[sc].out_size if sc is not None else 0
-            fm += g.in_size + g.out_size + sc_bytes
-            if g.kind == "add" and g.head.kind == "add":
-                # standalone eltwise: in+out counted; second operand:
-                extra = sum(gg.groups[i].out_size
-                            for i in gg.group_inputs(g)[1:]
-                            if i >= 0)
-                fm += extra
+            fm += row_fm_bytes(gg, g)
         else:
             # Reads of DRAM-resident inputs (boundaries, spills, concat
             # gathers) are charged to the consumer via boundary_reads; the
@@ -69,6 +76,46 @@ def dram_fm(gg: GroupedGraph, alloc: Allocation) -> int:
 def dram_report(gg: GroupedGraph, alloc: Allocation) -> DRAMReport:
     weights = sum(g.weight_size for g in gg.groups)   # read exactly once
     return DRAMReport(fm_bytes=dram_fm(gg, alloc), weight_bytes=weights)
+
+
+# ---------------------------------------------------- vectorized evaluation
+@dataclass
+class DRAMTables:
+    """Static per-group quantities for vectorized DRAM evaluation."""
+    row_fm: np.ndarray        # int64: row-mode fm traffic (0 for side/merge)
+    out_size: list[int]       # per-gid output bytes (Python ints, exact)
+    side: np.ndarray          # bool
+    weight_bytes: int         # constant weight traffic, eq. (9)
+
+
+def dram_tables(gg: GroupedGraph) -> DRAMTables:
+    n = len(gg.groups)
+    row_fm = np.zeros(n, dtype=np.int64)
+    side = np.zeros(n, dtype=bool)
+    out_size = [0] * n
+    for g in gg.groups:
+        out_size[g.gid] = g.out_size
+        if _is_side(gg, g):
+            side[g.gid] = True
+        else:
+            row_fm[g.gid] = row_fm_bytes(gg, g)
+    return DRAMTables(row_fm=row_fm, out_size=out_size, side=side,
+                      weight_bytes=sum(g.weight_size for g in gg.groups))
+
+
+def dram_fm_fast(t: DRAMTables, frame: np.ndarray,
+                 alloc: Allocation) -> int:
+    """``dram_fm`` as an array reduction over the allocation delta: the row
+    term is a masked sum of the static table; the frame term touches only
+    the boundary/spill sets the allocator actually produced (all of whose
+    members are frame-mode, non-side groups by construction)."""
+    fm = int(t.row_fm[~frame].sum())      # row_fm is 0 for side groups
+    fm += sum(alloc.boundary_reads.values())
+    out = t.out_size
+    fm += sum(out[gid] for gid in alloc.boundary_writes)
+    fm += sum(out[gid] for gid in alloc.spilled
+              if gid not in alloc.boundary_writes)
+    return fm
 
 
 def baseline_total(gg: GroupedGraph) -> int:

@@ -97,7 +97,7 @@ def _block_cost(b: LMBlockSpec, mode: str, hw: TPUConfig,
 
 
 def _evaluate(blocks: list[LMBlockSpec], modes: list[str],
-              hw: TPUConfig, vmem_budget: int) -> ResidencyPlan:
+              hw: TPUConfig) -> ResidencyPlan:
     hbm = 0
     t = 0.0
     vmem_peak = 0
@@ -142,7 +142,7 @@ def plan_cutpoint(blocks: list[LMBlockSpec], hw: TPUConfig = V5E,
             m = "resident" if (i >= cut and _fits(b, hw, vmem_budget)) \
                 else "streaming"
             modes.append(m)
-        plan = _evaluate(blocks, modes, hw, vmem_budget)
+        plan = _evaluate(blocks, modes, hw)
         plan.cut = cut
         if plan.vmem_peak > vmem_budget:
             continue
@@ -185,9 +185,13 @@ def plan_dp(blocks: list[LMBlockSpec], hw: TPUConfig = V5E,
                           dp["resident"][1])
     mode = min(dp, key=lambda k: dp[k][0])
     modes = dp[mode][1]
-    return _evaluate(blocks, modes, hw, vmem_budget)
+    return _evaluate(blocks, modes, hw)
 
 
 def streaming_baseline(blocks: list[LMBlockSpec],
-                       hw: TPUConfig = V5E) -> ResidencyPlan:
-    return _evaluate(blocks, ["streaming"] * len(blocks), hw, hw.vmem_bytes)
+                       hw: TPUConfig = V5E,
+                       vmem_budget: int | None = None) -> ResidencyPlan:
+    """All-streaming reference plan.  ``vmem_budget`` is accepted for
+    signature parity with the planners but is irrelevant: a streaming-only
+    plan pins nothing in VMEM."""
+    return _evaluate(blocks, ["streaming"] * len(blocks), hw)

@@ -3,6 +3,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
 
 from repro.core.allocator import Allocation
 from repro.core.grouping import GroupedGraph
@@ -75,19 +78,91 @@ def sram_report(gg: GroupedGraph, alloc: Allocation,
     sram_total = (row_buff + out_buff + write_buff
                   + sum(buff) + alloc.side_buff)
 
-    # Eq. (7) applied per physical buffer, To banks of 8-bit (x2 for the
-    # double-INT8 weight feed), 32-bit for partial sums.
-    def brams(total_bytes: int, width_bits: int) -> int:
-        if total_bytes == 0:
-            return 0
-        banks = hw.to
-        depth = math.ceil(total_bytes * 8 / (banks * width_bits))
-        return banks * bram18k_count(depth, width_bits)
-
-    bram = (brams(row_buff, 8) + brams(out_buff, 32) + brams(write_buff, 8)
-            + sum(brams(b, 8) for b in buff) + brams(alloc.side_buff, 8))
+    bram = _bram18k_total(row_buff, out_buff, write_buff, buff,
+                          alloc.side_buff, hw)
 
     return SRAMReport(weight_buff=weight_buff, row_buff=row_buff,
                       out_buff=out_buff, write_buff=write_buff, buff=buff,
                       side_buff=alloc.side_buff, sram_total=sram_total,
                       bram18k=bram)
+
+
+@lru_cache(maxsize=65536)
+def _brams(total_bytes: int, width_bits: int, banks: int) -> int:
+    """Eq. (7) for one physical buffer of ``banks`` banks (pure, cached:
+    the cut-point engine hits the same few buffer sizes millions of
+    times)."""
+    if total_bytes == 0:
+        return 0
+    depth = math.ceil(total_bytes * 8 / (banks * width_bits))
+    return banks * bram18k_count(depth, width_bits)
+
+
+def _bram18k_total(row_buff: int, out_buff: int, write_buff: int,
+                   buff: list[int], side_buff: int, hw: FPGAConfig) -> int:
+    # Eq. (7) applied per physical buffer, To banks of 8-bit (x2 for the
+    # double-INT8 weight feed), 32-bit for partial sums.
+    to = hw.to
+    return (_brams(row_buff, 8, to) + _brams(out_buff, 32, to)
+            + _brams(write_buff, 8, to)
+            + sum(_brams(b, 8, to) for b in buff)
+            + _brams(side_buff, 8, to))
+
+
+# ---------------------------------------------------- vectorized evaluation
+@dataclass
+class SRAMTables:
+    """Static per-group candidate terms for eqs. (1)-(5); the maxima are
+    taken per candidate policy as masked array reductions."""
+    compute: np.ndarray       # bool: compute/scale groups (eq. 1-5 domain)
+    weight: np.ndarray        # int64: weight bytes (eq. 1 candidates)
+    out_frame: np.ndarray     # int64: eq. (4) frame-mode candidates
+    out_row: np.ndarray       # int64: eq. (4) row-mode candidates
+    wr_row: np.ndarray        # int64: eq. (5) row-mode candidates
+    wr_frame: list[int]       # eq. (5) frame-mode boundary-write candidates
+    row_buff: int             # eq. (3): policy-independent
+
+
+def sram_tables(gg: GroupedGraph, hw: FPGAConfig) -> SRAMTables:
+    n = len(gg.groups)
+    compute = np.zeros(n, dtype=bool)
+    weight = np.zeros(n, dtype=np.int64)
+    out_frame = np.zeros(n, dtype=np.int64)
+    out_row = np.zeros(n, dtype=np.int64)
+    wr_row = np.zeros(n, dtype=np.int64)
+    wr_frame = [0] * n
+    row_buff = 0
+    for g in gg.groups:
+        if not (g.is_compute or g.kind == "scale"):
+            continue
+        compute[g.gid] = True
+        weight[g.gid] = g.weight_size
+        row_buff = max(row_buff, 6 * g.head.in_w * g.head.in_ch * g.head.qa)
+        out_frame[g.gid] = g.head.out_w * g.head.out_h * hw.to * g.head.qs
+        out_row[g.gid] = g.head.out_w * hw.to * g.head.qs
+        wr_row[g.gid] = g.tail.out_w * hw.to * g.tail.qa
+        wr_frame[g.gid] = g.tail.out_w * g.tail.out_h * hw.to * g.tail.qa
+    return SRAMTables(compute=compute, weight=weight, out_frame=out_frame,
+                      out_row=out_row, wr_row=wr_row, wr_frame=wr_frame,
+                      row_buff=row_buff)
+
+
+def sram_total_fast(t: SRAMTables, frame: np.ndarray, alloc: Allocation,
+                    hw: FPGAConfig) -> tuple[int, int]:
+    """(sram_total, bram18k), bit-identical to ``sram_report``."""
+    rowm = t.compute & ~frame
+    frm = t.compute & frame
+    weight_buff = int(t.weight.max(where=rowm, initial=0))
+    buff = list(alloc.buff)
+    buff[1] = max(buff[1], weight_buff)
+    out_buff = max(int(t.out_frame.max(where=frm, initial=0)),
+                   int(t.out_row.max(where=rowm, initial=0)))
+    wr_row = int(t.wr_row.max(where=rowm, initial=0))
+    wr_frame = max((t.wr_frame[gid] for gid in alloc.boundary_writes
+                    if frm[gid]), default=0)
+    write_buff = max(wr_row, wr_frame)
+    sram_total = (t.row_buff + out_buff + write_buff
+                  + sum(buff) + alloc.side_buff)
+    bram = _bram18k_total(t.row_buff, out_buff, write_buff, buff,
+                          alloc.side_buff, hw)
+    return sram_total, bram

@@ -22,6 +22,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from repro.core.allocator import Allocation, _is_side
 from repro.core.grouping import Group, GroupedGraph
 from repro.core.hw import FPGAConfig
@@ -64,6 +66,24 @@ def compute_cycles(g: Group, hw: FPGAConfig) -> float:
     return cyc
 
 
+def row_latency(gg: GroupedGraph, g: Group, hw: FPGAConfig,
+                comp: float) -> float:
+    """Row-mode (Fig. 3b) group latency.  Depends only on the group and the
+    graph topology, never on the allocation, so it can be tabulated once."""
+    if g.kind in ("concat", "route"):
+        return hw.group_overhead_cycles              # redirect: free
+    bpc = hw.dram_bytes_per_cycle
+    sc = gg.shortcut_source_group(g)
+    sc_bytes = gg.groups[sc].out_size if sc is not None else 0
+    extra_in = 0
+    if g.head.kind == "add":
+        extra_in = sum(gg.groups[i].out_size
+                       for i in gg.group_inputs(g)[1:] if i >= 0)
+    fm_bytes = g.in_size + g.out_size + sc_bytes + extra_in
+    weight_load = g.weight_size / bpc
+    return weight_load + max(comp, fm_bytes / bpc) + hw.group_overhead_cycles
+
+
 def group_latency(gg: GroupedGraph, g: Group, alloc: Allocation,
                   hw: FPGAConfig) -> float:
     policy = alloc.policy
@@ -77,17 +97,7 @@ def group_latency(gg: GroupedGraph, g: Group, alloc: Allocation,
     comp = compute_cycles(g, hw)
 
     if mode == "row":
-        if g.kind in ("concat", "route"):
-            return hw.group_overhead_cycles          # redirect: free
-        sc = gg.shortcut_source_group(g)
-        sc_bytes = gg.groups[sc].out_size if sc is not None else 0
-        extra_in = 0
-        if g.head.kind == "add":
-            extra_in = sum(gg.groups[i].out_size
-                           for i in gg.group_inputs(g)[1:] if i >= 0)
-        fm_bytes = g.in_size + g.out_size + sc_bytes + extra_in
-        weight_load = g.weight_size / bpc
-        return weight_load + max(comp, fm_bytes / bpc) + hw.group_overhead_cycles
+        return row_latency(gg, g, hw, comp)
 
     # frame mode
     io_bytes = alloc.boundary_reads.get(g.gid, 0)
@@ -101,6 +111,51 @@ def latency_report(gg: GroupedGraph, alloc: Allocation,
                    hw: FPGAConfig) -> LatencyReport:
     per_group = {g.gid: group_latency(gg, g, alloc, hw) for g in gg.groups}
     return LatencyReport(cycles=sum(per_group.values()), per_group=per_group)
+
+
+# ---------------------------------------------------- vectorized evaluation
+@dataclass
+class LatencyTables:
+    """Static per-group quantities for vectorized latency evaluation.
+
+    Every entry is computed with exactly the scalar code paths above
+    (``compute_cycles`` / ``row_latency``), so the vectorized total is
+    bit-identical to ``latency_report`` for any allocation."""
+    comp: np.ndarray          # float64: compute cycles per group
+    row: np.ndarray           # float64: full row-mode latency per group
+    weight: np.ndarray        # float64: weight bytes per group
+    side: np.ndarray          # bool: SE side-path groups
+
+
+def latency_tables(gg: GroupedGraph, hw: FPGAConfig) -> LatencyTables:
+    n = len(gg.groups)
+    comp = np.empty(n)
+    row = np.empty(n)
+    weight = np.empty(n)
+    side = np.zeros(n, dtype=bool)
+    for g in gg.groups:
+        c = compute_cycles(g, hw)
+        comp[g.gid] = c
+        weight[g.gid] = g.weight_size
+        if _is_side(gg, g):
+            side[g.gid] = True
+            row[g.gid] = c
+        else:
+            row[g.gid] = row_latency(gg, g, hw, c)
+    return LatencyTables(comp=comp, row=row, weight=weight, side=side)
+
+
+def latency_cycles_fast(t: LatencyTables, frame: np.ndarray,
+                        io_bytes: np.ndarray, hw: FPGAConfig) -> float:
+    """Total cycles for a policy given per-group frame mask and per-group
+    frame-mode boundary-I/O bytes (from the allocation).
+
+    Elementwise IEEE ops match the scalar model bit-for-bit; the final sum
+    runs left-to-right in gid order, exactly like ``latency_report``."""
+    mem = (t.weight + io_bytes) / hw.dram_bytes_per_cycle
+    frame_lat = np.maximum(t.comp, mem) + hw.group_overhead_cycles
+    per = np.where(t.side, t.comp, np.where(frame, frame_lat, t.row))
+    return sum(per.tolist())
 
 
 def gops(gg: GroupedGraph, alloc: Allocation, hw: FPGAConfig) -> float:

@@ -1,0 +1,12 @@
+"""jax version compatibility for the Pallas kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` in newer
+releases; export whichever this installation provides so every kernel module
+imports the alias from one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

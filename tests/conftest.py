@@ -1,0 +1,11 @@
+import sys
+from pathlib import Path
+
+# Make src/ importable without requiring PYTHONPATH=src (CI sets it anyway).
+_src = Path(__file__).resolve().parent.parent / "src"
+if str(_src) not in sys.path:
+    sys.path.insert(0, str(_src))
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

@@ -2,8 +2,7 @@
 the instruction-stream simulator for RANDOM residual CNNs under RANDOM
 reuse policies, and the allocator must never clobber live tensors."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.allocator import allocate
 from repro.core.dram import dram_report

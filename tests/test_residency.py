@@ -3,8 +3,7 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.hw import V5E
 from repro.core.residency import (LMBlockSpec, _evaluate, plan_cutpoint,
@@ -72,7 +71,7 @@ def test_dp_matches_bruteforce(n, seed):
                and blocks[i].resident_vmem(V5E) > V5E.vmem_bytes
                for i, m in enumerate(modes)):
             continue
-        c = _evaluate(blocks, list(modes), V5E, V5E.vmem_bytes)
+        c = _evaluate(blocks, list(modes), V5E)
         if best is None or c.est_seconds < best.est_seconds:
             best = c
     assert abs(dp.est_seconds - best.est_seconds) < 1e-9
