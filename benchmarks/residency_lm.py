@@ -14,12 +14,12 @@ from __future__ import annotations
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.core.hw import V5E
-from repro.core.residency import (LMBlockSpec, plan_cutpoint, plan_dp,
-                                  streaming_baseline)
+from repro.core.residency import (LMBlockSpec, ResidencyEngine, plan_cutpoint,
+                                  plan_dp, streaming_baseline)
 from repro.utils.costmodel import _ffn_flops, _layer_kinds, forward_flops
 
 
-def make_blocks(cfg: ModelConfig, cell: ShapeCell, chips: int = 256,
+def make_blocks(cfg: ModelConfig, cell: ShapeCell,
                 model_shards: int = 16, batch_shards: int = 16,
                 dtype_bytes: int = 2) -> list[LMBlockSpec]:
     """Per-device LMBlockSpecs for one step of this cell."""
@@ -59,8 +59,7 @@ def make_blocks(cfg: ModelConfig, cell: ShapeCell, chips: int = 256,
             weight_bytes=w_bytes,
             stream_bytes=stream,
             act_bytes=act,
-            flops=int(B_loc * cell.global_batch / max(cell.global_batch, 1)
-                      * layer_flops / chips * chips / batch_shards),
+            flops=int(B_loc * layer_flops / model_shards),
             state_bytes=kv if cell.mode == "decode" else 0))
     return blocks
 
@@ -69,9 +68,10 @@ def report(arch: str, shape: str) -> dict:
     cfg = get_config(arch)
     cell = SHAPES[shape]
     blocks = make_blocks(cfg, cell)
+    engine = ResidencyEngine(blocks, V5E)        # shared cost tables/sums
     base = streaming_baseline(blocks, V5E)
-    cut = plan_cutpoint(blocks, V5E)
-    dp = plan_dp(blocks, V5E)
+    cut = plan_cutpoint(blocks, V5E, engine=engine)
+    dp = plan_dp(blocks, V5E, engine=engine)
     gb = 1 / (1 << 30)
     return {
         "arch": arch, "shape": shape,

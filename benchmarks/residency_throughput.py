@@ -1,0 +1,268 @@
+"""Residency-planner throughput benchmark: ResidencyEngine vs direct sweep.
+
+For synthetic deep stacks (1k-10k blocks: homogeneous LM, MoE interleaves,
+heterogeneous vision/cross stacks) measures
+  * the seed-shaped O(N^2) cut sweep (per-cut ``_evaluate``, the direct
+    oracle loop ``plan_cutpoint`` used to run),
+  * the O(N) :class:`ResidencyEngine` sweep behind today's ``plan_cutpoint``
+    (engine build + all-cut sweep + oracle materialization of the winner),
+  * the reference transition DP with per-state path copying vs the engine's
+    table-driven parent-pointer DP,
+and writes ``BENCH_residency.json`` (per-stack rows plus the regenerated
+``benchmarks/residency_lm.py`` arch table).  The engine numbers are only
+meaningful because the engine is oracle-exact -- equivalence is enforced by
+tests/test_residency_engine.py and spot-checked here.
+
+Usage:
+    PYTHONPATH=src python benchmarks/residency_throughput.py [--smoke] [-o F]
+
+``--smoke`` runs small stacks with short budgets and asserts engine/direct
+agreement plus a conservative speedup gate instead of writing the JSON
+(CI regression gate, alongside compile_throughput.py --smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import random
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.hw import V5E                                    # noqa: E402
+from repro.core.residency import (LMBlockSpec, ResidencyEngine,  # noqa: E402
+                                  _evaluate, _fits, plan_cutpoint, plan_dp)
+
+MB = 1 << 20
+
+STACKS = [("uniform-lm", 1000), ("moe-interleave", 2000),
+          ("hetero-vision-cross", 2000), ("uniform-lm", 5000),
+          ("moe-interleave", 10000)]
+SMOKE_STACKS = [("uniform-lm", 96), ("moe-interleave", 128),
+                ("hetero-vision-cross", 512)]
+
+# direct sweeps beyond this are timed on a sample of cuts and extrapolated
+# (the full N=10k sweep is ~100M block evaluations -- minutes of pure
+# Python; that slowness is the point of this benchmark)
+FULL_DIRECT_LIMIT = 2000
+
+
+def make_stack(kind: str, n: int, seed: int = 0) -> list[LMBlockSpec]:
+    """Synthetic deep stacks exercising the planner shapes the LM benchmark
+    produces: homogeneous decoder stacks, MoE interleaves whose expert
+    blocks never fit VMEM, and heterogeneous vision/cross stacks with
+    differing residual-stream widths (the case the boundary accounting
+    must price with the predecessor's stream bytes)."""
+    rng = random.Random(seed)
+    blocks = []
+    for i in range(n):
+        if kind == "uniform-lm":
+            blocks.append(LMBlockSpec(
+                idx=i, kind="attn" if i % 2 else "mlp",
+                weight_bytes=48 * MB, stream_bytes=8 * MB,
+                act_bytes=24 * MB, flops=6 * 10 ** 11,
+                state_bytes=4 * MB if i % 2 else 0))
+        elif kind == "moe-interleave":
+            moe = i % 2 == 1
+            blocks.append(LMBlockSpec(
+                idx=i, kind="moe" if moe else "attn",
+                weight_bytes=(256 if moe else 32) * MB,
+                stream_bytes=8 * MB,
+                act_bytes=(96 if moe else 16) * MB,
+                flops=(4 if moe else 3) * 10 ** 11,
+                vmem_resident=500 * MB if moe else 0))  # dispatch buffers
+        elif kind == "hetero-vision-cross":
+            k = rng.choice(["attn", "mlp", "cross", "vision"])
+            width = {"attn": 8, "mlp": 8, "cross": 16, "vision": 48}[k]
+            blocks.append(LMBlockSpec(
+                idx=i, kind=k,
+                weight_bytes=rng.choice([16, 48, 96]) * MB,
+                stream_bytes=width * MB,
+                act_bytes=rng.choice([8, 32, 64]) * MB,
+                flops=rng.choice([2, 5, 9]) * 10 ** 11,
+                state_bytes=rng.choice([0, 8]) * MB))
+        else:
+            raise ValueError(kind)
+    return blocks
+
+
+def direct_sweep(blocks, hw, vmem_budget=None, budget_s=None):
+    """The seed-shaped O(N^2) planner: one full ``_evaluate`` per cut.
+    Returns (best_plan, cuts_evaluated, elapsed_s); stops early once
+    ``budget_s`` is exceeded (for extrapolated timings)."""
+    vmem_budget = vmem_budget or hw.vmem_bytes
+    fits = [_fits(b, hw, vmem_budget) for b in blocks]
+    best = None
+    n_eval = 0
+    t0 = time.perf_counter()
+    for cut in range(len(blocks) + 1):
+        modes = ["resident" if (i >= cut and fits[i]) else "streaming"
+                 for i in range(len(blocks))]
+        plan = _evaluate(blocks, modes, hw)
+        plan.cut = cut
+        n_eval += 1
+        if best is None or (plan.est_seconds, plan.hbm_bytes) < \
+                (best.est_seconds, best.hbm_bytes):
+            best = plan
+        if budget_s is not None and time.perf_counter() - t0 > budget_s:
+            break
+    return best, n_eval, time.perf_counter() - t0
+
+
+def direct_dp(blocks, hw, vmem_budget=None, budget_s=None):
+    """The seed-shaped transition DP: ``_block_cost``-style pricing per
+    transition and per-state path copies (O(N^2) path growth).  Returns
+    (modes | None, blocks_processed, elapsed_s)."""
+    from repro.core.residency import _block_cost, _entry_stream
+    vmem_budget = vmem_budget or hw.vmem_bytes
+    INF = (math.inf, math.inf)
+    dp = {"streaming": ((0.0, 0), []), "resident": (INF, [])}
+    t0 = time.perf_counter()
+    done = 0
+    for i, b in enumerate(blocks):
+        nxt = {"streaming": (INF, []), "resident": (INF, [])}
+        for m in ("streaming", "resident"):
+            if m == "resident" and not _fits(b, hw, vmem_budget):
+                continue
+            for pm in ("streaming", "resident"):
+                c0, path = dp[pm]
+                if c0 == INF:
+                    continue
+                boundary = _entry_stream(blocks, i) if pm != m else 0
+                bb, bt = _block_cost(b, m, hw, boundary)
+                cost = (c0[0] + bt, c0[1] + bb)
+                if cost < nxt[m][0]:
+                    nxt[m] = (cost, path + [m])
+        dp = nxt
+        done += 1
+        if budget_s is not None and time.perf_counter() - t0 > budget_s:
+            return None, done, time.perf_counter() - t0
+    if dp["resident"][0] != INF:
+        xb = blocks[-1].stream_bytes
+        c = dp["resident"][0]
+        dp["resident"] = ((c[0] + xb / hw.hbm_bw, c[1] + xb),
+                          dp["resident"][1])
+    mode = min(dp, key=lambda k: dp[k][0])
+    return dp[mode][1], done, time.perf_counter() - t0
+
+
+def bench_stack(kind: str, n: int, budget_s: float,
+                check_equiv: bool = False) -> dict:
+    blocks = make_stack(kind, n)
+    n_cuts = n + 1
+
+    # direct O(N^2) sweep (full below the limit, extrapolated above)
+    cap = None if n <= FULL_DIRECT_LIMIT else budget_s
+    d_best, d_evals, d_elapsed = direct_sweep(blocks, V5E, budget_s=cap)
+    extrapolated = d_evals < n_cuts
+    direct_s = d_elapsed if not extrapolated \
+        else d_elapsed * n_cuts / d_evals
+
+    # engine path, as plan_cutpoint runs it (build + sweep + materialize)
+    t0 = time.perf_counter()
+    engine = ResidencyEngine(blocks, V5E)
+    cut_plan = plan_cutpoint(blocks, V5E, engine=engine)
+    engine_s = time.perf_counter() - t0
+
+    if check_equiv or not extrapolated:
+        assert (cut_plan.est_seconds, cut_plan.hbm_bytes, cut_plan.cut) == \
+            (d_best.est_seconds, d_best.hbm_bytes, d_best.cut), (kind, n)
+    if check_equiv:
+        for cut in range(0, n_cuts, max(1, n // 37)):
+            modes, _ = engine.cut_modes(cut)
+            o = _evaluate(blocks, modes, V5E)
+            est, hbm, vm = engine.evaluate_cut(cut)
+            assert (est, hbm, vm) == \
+                (o.est_seconds, o.hbm_bytes, o.vmem_peak), (kind, n, cut)
+
+    # DP: reference path-copying transition loop vs engine parent pointers
+    dp_cap = None if n <= FULL_DIRECT_LIMIT else budget_s
+    d_modes, d_done, dd_elapsed = direct_dp(blocks, V5E, budget_s=dp_cap)
+    dp_direct_s = dd_elapsed if d_modes is not None \
+        else dd_elapsed * n / max(d_done, 1)
+    t0 = time.perf_counter()
+    dp_plan = plan_dp(blocks, V5E, engine=engine)
+    dp_engine_s = time.perf_counter() - t0
+    if d_modes is not None:
+        assert dp_plan.modes == d_modes, (kind, n)
+
+    row = {
+        "blocks": n,
+        "direct_sweep_s": round(direct_s, 3),
+        "direct_sweep_extrapolated": extrapolated,
+        "engine_plan_s": round(engine_s, 4),
+        "sweep_speedup": round(direct_s / engine_s, 1),
+        "direct_cuts_per_sec": round(d_evals / d_elapsed, 1),
+        "engine_cuts_per_sec": round(n_cuts / max(engine_s, 1e-9), 1),
+        "dp_direct_s": round(dp_direct_s, 3),
+        "dp_direct_extrapolated": d_modes is None,
+        "dp_engine_s": round(dp_engine_s, 4),
+        "dp_speedup": round(dp_direct_s / dp_engine_s, 1),
+        "cutpoint_cut": cut_plan.cut,
+        "dp_resident_blocks": dp_plan.n_resident,
+    }
+    print(f"{kind}@{n}: direct={direct_s:.2f}s"
+          f"{'~' if extrapolated else ''} engine={engine_s * 1e3:.1f}ms "
+          f"sweep x{row['sweep_speedup']} dp x{row['dp_speedup']}")
+    return row
+
+
+def arch_table() -> list[dict]:
+    """Regenerate the residency_lm.py report rows (the numbers changed with
+    the per-device FLOPs fix and the boundary-accounting fix)."""
+    try:
+        from residency_lm import report
+    except ImportError:                                  # pragma: no cover
+        from benchmarks.residency_lm import report
+    rows = []
+    for arch, shape in [
+        ("granite-20b", "decode_32k"), ("granite-20b", "prefill_32k"),
+        ("gemma2-27b", "decode_32k"), ("moonshot-v1-16b-a3b", "decode_32k"),
+        ("smollm-360m", "decode_32k"), ("mamba2-2.7b", "decode_32k"),
+        ("qwen3-moe-235b-a22b", "decode_32k"),
+    ]:
+        rows.append(report(arch, shape))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short CI run: small stacks, equivalence asserted, "
+                         "no JSON written")
+    ap.add_argument("-o", "--output", default="BENCH_residency.json")
+    args = ap.parse_args()
+
+    stacks = SMOKE_STACKS if args.smoke else STACKS
+    budget = 0.5 if args.smoke else 5.0
+    results = {}
+    for kind, n in stacks:
+        results[f"{kind}@{n}"] = bench_stack(kind, n, budget,
+                                             check_equiv=args.smoke)
+
+    if args.smoke:
+        worst = min(r["sweep_speedup"] for r in results.values())
+        # regression gate: the engine must stay clearly ahead of the
+        # direct sweep even on small stacks / loaded CI machines (real
+        # margin at >=2000 blocks is >=100x)
+        assert worst > 3, f"engine sweep speedup regressed to {worst}x"
+        print(f"smoke OK: min sweep speedup {worst}x")
+        return
+
+    payload = {
+        "hw": V5E.name,
+        "note": "O(N) ResidencyEngine vs seed-shaped O(N^2) per-cut sweep "
+                "and path-copying DP; engine is oracle-exact "
+                "(tests/test_residency_engine.py)",
+        "stacks": results,
+        "archs": arch_table(),
+    }
+    Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {args.output}")
+
+
+if __name__ == "__main__":
+    main()

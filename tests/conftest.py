@@ -1,10 +1,13 @@
 import sys
 from pathlib import Path
 
-# Make src/ importable without requiring PYTHONPATH=src (CI sets it anyway).
-_src = Path(__file__).resolve().parent.parent / "src"
-if str(_src) not in sys.path:
-    sys.path.insert(0, str(_src))
+# Make src/ importable without requiring PYTHONPATH=src (CI sets it anyway),
+# and the repo root for the benchmarks/ namespace package, so tests run from
+# any cwd / launcher.
+_root = Path(__file__).resolve().parent.parent
+for _p in (_root / "src", _root):
+    if str(_p) not in sys.path:
+        sys.path.insert(0, str(_p))
 
 
 def pytest_configure(config):

@@ -1,0 +1,112 @@
+"""ResidencyEngine oracle-equivalence tests: the O(N) engine must agree
+bit-for-bit with the per-cut `_evaluate` oracle (est_seconds / hbm_bytes /
+vmem_peak) on fuzzed heterogeneous stacks and on every arch the LM
+residency benchmark plans, and its DP must pick the same modes as the
+reference transition-by-transition DP."""
+import random
+
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.hw import V5E
+from repro.core.residency import (LMBlockSpec, ResidencyEngine, _evaluate,
+                                  plan_cutpoint, plan_dp)
+
+MB = 1 << 20
+
+
+def rand_stack(n, seed):
+    """Heterogeneous stack: stream/state/vmem vary per block (the shapes
+    the boundary accounting and fit-gating must price correctly)."""
+    rng = random.Random(seed)
+    return [LMBlockSpec(
+        idx=i,
+        kind=rng.choice(["attn", "mlp", "moe", "cross", "vision"]),
+        weight_bytes=rng.choice([8, 64, 512, 4096]) * MB,
+        stream_bytes=rng.choice([1, 8, 64, 256]) * MB,
+        act_bytes=rng.choice([4, 32, 256]) * MB,
+        flops=rng.choice([10 ** 11, 10 ** 12, 10 ** 13]),
+        state_bytes=rng.choice([0, 0, 16, 128]) * MB,
+        vmem_resident=rng.choice([0, 0, 0, 32, 500]) * MB)
+        for i in range(n)]
+
+
+def reference_dp_modes(blocks, hw, vmem_budget=None):
+    from benchmarks.residency_throughput import direct_dp
+    modes, _, _ = direct_dp(blocks, hw, vmem_budget)
+    return modes
+
+
+def assert_engine_matches_oracle(blocks, vmem_budget=None):
+    eng = ResidencyEngine(blocks, V5E, vmem_budget)
+    for cut in range(len(blocks) + 1):
+        modes, forced = eng.cut_modes(cut)
+        oracle = _evaluate(blocks, modes, V5E)
+        est, hbm, vmem = eng.evaluate_cut(cut)
+        assert est == oracle.est_seconds          # bit-for-bit, no tolerance
+        assert hbm == oracle.hbm_bytes
+        assert vmem == oracle.vmem_peak
+        assert all(modes[i] == "streaming" for i in forced)
+    return eng
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 40), seed=st.integers(0, 10 ** 6))
+def test_engine_cut_equivalence_fuzz(n, seed):
+    blocks = rand_stack(n, seed)
+    budget = random.Random(seed ^ 0xbeef).choice(
+        [None, 16 * MB, 64 * MB, 256 * MB])
+    assert_engine_matches_oracle(blocks, budget)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 40), seed=st.integers(0, 10 ** 6))
+def test_engine_dp_matches_reference_fuzz(n, seed):
+    blocks = rand_stack(n, seed)
+    budget = random.Random(seed ^ 0xcafe).choice([None, 16 * MB, 64 * MB])
+    eng = ResidencyEngine(blocks, V5E, budget)
+    assert eng.dp_modes() == reference_dp_modes(blocks, V5E, budget)
+    # materialized plans go through the oracle, so bit-equality follows
+    dp = plan_dp(blocks, V5E, budget, engine=eng)
+    ref = _evaluate(blocks, reference_dp_modes(blocks, V5E, budget), V5E)
+    assert (dp.est_seconds, dp.hbm_bytes, dp.vmem_peak) == \
+        (ref.est_seconds, ref.hbm_bytes, ref.vmem_peak)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 30), seed=st.integers(0, 10 ** 6))
+def test_plan_cutpoint_matches_direct_sweep(n, seed):
+    from benchmarks.residency_throughput import direct_sweep
+    blocks = rand_stack(n, seed)
+    plan = plan_cutpoint(blocks, V5E)
+    direct, evals, _ = direct_sweep(blocks, V5E)
+    assert evals == n + 1
+    assert (plan.cut, plan.est_seconds, plan.hbm_bytes, plan.vmem_peak) == \
+        (direct.cut, direct.est_seconds, direct.hbm_bytes, direct.vmem_peak)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-20b", "decode_32k"), ("granite-20b", "prefill_32k"),
+    ("gemma2-27b", "decode_32k"), ("moonshot-v1-16b-a3b", "decode_32k"),
+    ("smollm-360m", "decode_32k"), ("mamba2-2.7b", "decode_32k"),
+    ("qwen3-moe-235b-a22b", "decode_32k"),
+])
+def test_engine_matches_oracle_on_lm_archs(arch, shape):
+    from benchmarks.residency_lm import make_blocks
+    from repro.configs import SHAPES, get_config
+    blocks = make_blocks(get_config(arch), SHAPES[shape])
+    eng = assert_engine_matches_oracle(blocks)
+    assert eng.dp_modes() == reference_dp_modes(blocks, V5E)
+
+
+def test_engine_synthetic_throughput_stacks():
+    from benchmarks.residency_throughput import make_stack
+    for kind in ("uniform-lm", "moe-interleave", "hetero-vision-cross"):
+        assert_engine_matches_oracle(make_stack(kind, 64))
+
+
+def test_engine_empty_and_single():
+    assert plan_cutpoint([], V5E).modes == []
+    assert plan_dp([], V5E).modes == []
+    blocks = rand_stack(1, 7)
+    assert_engine_matches_oracle(blocks)
