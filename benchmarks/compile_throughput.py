@@ -5,22 +5,32 @@ For every CNN-zoo network, measures
     full allocate + whole-graph reports per tuple, the seed inner loop),
   * candidate evaluations/sec of :class:`CutpointEngine` over the same
     product-order enumeration the exhaustive search walks,
-  * end-to-end ``compile_graph`` wall time,
-and writes ``BENCH_compile.json`` (schema below).  The engine numbers are
-only meaningful because the engine is oracle-exact -- equivalence is
-enforced by tests/test_cutpoint_engine.py and spot-checked here.
+  * end-to-end ``compile_graph`` wall time (at ``--workers``, since the
+    default 8M ``exhaustive_limit`` makes yolov2's 7.96M-tuple space fully
+    enumerable),
+plus a **workers sweep**: the same fixed slice of yolov2's partitioned cut
+space pushed through the search pool at 1/2/4/8 workers, recording wall
+time, evals/sec and speedup (with ``cpu_count`` alongside -- scaling
+plateaus at the physical core count).  Everything lands in
+``BENCH_compile.json``.  The engine numbers are only meaningful because the
+engine is oracle-exact -- equivalence is enforced by
+tests/test_cutpoint_engine.py, and serial/parallel search bit-identity by
+tests/test_search_pool.py; both are spot-checked here in smoke mode.
 
 Usage:
     PYTHONPATH=src python benchmarks/compile_throughput.py [--smoke] [-o F]
 
 ``--smoke`` runs two small networks with short budgets and asserts the
-engine/oracle agreement instead of writing the JSON (CI regression gate).
+engine/oracle agreement plus serial-vs-parallel search bit-identity
+instead of writing the JSON (CI regression gate).
 """
 from __future__ import annotations
 
 import argparse
 import itertools
 import json
+import os
+import pickle
 import sys
 import time
 from pathlib import Path
@@ -29,10 +39,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.cnn import build_cnn                                  # noqa: E402
 from repro.core.compiler import compile_graph                    # noqa: E402
-from repro.core.cutpoint import (CutpointEngine, evaluate,       # noqa: E402
-                                 monotone_runs, split_blocks)
+from repro.core.cutpoint import (CutpointEngine, _key, evaluate,  # noqa: E402
+                                 monotone_runs, search, split_blocks)
 from repro.core.grouping import group_nodes                      # noqa: E402
 from repro.core.hw import KCU1500                                # noqa: E402
+from repro.core.search_pool import (ParallelSearchDriver,        # noqa: E402
+                                    _run_subspace, partition_space)
 
 ZOO = [("vgg16-conv", 224), ("yolov2", 416), ("yolov3", 416),
        ("resnet50", 224), ("resnet152", 224), ("efficientnet-b1", 256),
@@ -47,8 +59,108 @@ def _product_tuples(runs):
     return itertools.product(*[range(len(r) + 1) for r in runs])
 
 
+def _burn(n: int) -> int:
+    x = 0
+    for i in range(n):
+        x += i * i
+    return x
+
+
+def measure_parallel_capacity(workers: int, n: int = 20_000_000) -> float:
+    """Effective parallel speedup of this machine for pure-Python work.
+
+    Containers and hypervisors routinely advertise more CPUs than they
+    deliver; this runs ``workers`` identical busy loops concurrently and
+    reports (total work)/(wall x serial rate).  The workers-sweep speedup
+    below should be read against this ceiling, not against the advertised
+    ``cpu_count``.
+    """
+    import multiprocessing as mp
+    t0 = time.perf_counter()
+    _burn(n)
+    serial = time.perf_counter() - t0
+    procs = [mp.Process(target=_burn, args=(n,)) for _ in range(workers)]
+    t0 = time.perf_counter()
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+    wall = time.perf_counter() - t0
+    return workers * serial / wall
+
+
+def bench_workers_sweep(name: str, size: int, worker_counts: list[int],
+                        n_tasks: int = 16) -> dict:
+    """Fixed-work scaling measurement on a detector-scale cut space.
+
+    Partitions the network's cut product exactly as ``search(workers=N)``
+    does, takes the first ``n_tasks`` equal-sized sub-spaces (a deep slice
+    of yolov2's 7.96M tuples -- large enough to amortize pool startup,
+    small enough to sweep four worker counts in minutes), and pushes the
+    *same* slice through the pool at each worker count.  Also asserts that
+    every configuration merges to the same argmin (determinism is not a
+    matter of luck -- tests/test_search_pool.py proves it, this keeps the
+    benchmark honest about it).
+    """
+    gg = group_nodes(build_cnn(name, size))
+    blocks = split_blocks(gg)
+    runs = monotone_runs(blocks)
+    prefixes, suffix_dims = partition_space(
+        runs, target_tasks=max(64, 8 * max(worker_counts)))
+    prefixes = prefixes[:n_tasks]
+    task_size = 1
+    for d in suffix_dims:
+        task_size *= d + 1
+    tuples = len(prefixes) * task_size
+    payload = pickle.dumps((gg, KCU1500), protocol=pickle.HIGHEST_PROTOCOL)
+
+    sweep: dict[str, dict] = {}
+    argmins = set()
+    base_eps = None
+    for w in worker_counts:
+        token = ("sweep", name, size, w)
+        tasks = [(token, payload, p, suffix_dims, "latency")
+                 for p in prefixes]
+        t0 = time.perf_counter()
+        if w == 1:
+            results = [_run_subspace(t) for t in tasks]
+        else:
+            with ParallelSearchDriver(workers=w) as driver:
+                results = driver.map(_run_subspace, tasks)
+        wall = time.perf_counter() - t0
+        evals = sum(n for _, n in results)
+        assert evals == tuples
+        best = min((m for m, _ in results),
+                   key=lambda m: (_key(m, "latency"), m.cuts))
+        argmins.add(best.cuts)
+        eps = evals / wall
+        if base_eps is None:
+            base_eps = eps
+        sweep[str(w)] = {"wall_s": round(wall, 2),
+                         "evals_per_sec": round(eps, 1),
+                         "speedup_vs_1w": round(eps / base_eps, 2)}
+        print(f"workers sweep {name}: w={w} {wall:.1f}s "
+              f"{eps:.0f} evals/s ({sweep[str(w)]['speedup_vs_1w']}x)")
+    assert len(argmins) == 1, "sub-space merge must be worker-independent"
+    capacity = measure_parallel_capacity(max(worker_counts))
+    print(f"machine parallel capacity at {max(worker_counts)} busy loops: "
+          f"{capacity:.2f}x")
+    return {
+        "network": f"{name}@{size}",
+        "tuples": tuples,
+        "tasks": len(prefixes),
+        "cpu_count": os.cpu_count(),
+        "parallel_capacity": round(capacity, 2),
+        "note": "fixed slice of the partitioned cut space; speedup "
+                "saturates at the machine's measured parallel_capacity "
+                "(busy-loop ceiling), not at the advertised cpu_count",
+        "workers": sweep,
+    }
+
+
 def bench_network(name: str, size: int, budget_s: float,
-                  check_equiv: bool = False) -> dict:
+                  check_equiv: bool = False,
+                  compile_workers: int = 1) -> dict:
     gg = group_nodes(build_cnn(name, size))
     blocks = split_blocks(gg)
     runs = monotone_runs(blocks)
@@ -88,7 +200,7 @@ def bench_network(name: str, size: int, budget_s: float,
     # end-to-end compile (grouping + search + instruction generation)
     graph = build_cnn(name, size)
     t0 = time.perf_counter()
-    plan = compile_graph(graph, KCU1500)
+    plan = compile_graph(graph, KCU1500, workers=compile_workers)
     compile_s = time.perf_counter() - t0
 
     row = {
@@ -106,20 +218,51 @@ def bench_network(name: str, size: int, budget_s: float,
     return row
 
 
+def smoke_parallel_gate() -> None:
+    """CI gate for the search pool: parallel search must reproduce the
+    serial SearchResult exactly (metrics, winning tuple, evaluation
+    count) on a real network whose space is actually partitioned."""
+    gg = group_nodes(build_cnn("resnet50", 224))
+    serial = search(gg, KCU1500)
+    parallel = search(gg, KCU1500, workers=2)
+    assert serial.best.cuts == parallel.best.cuts
+    for f in METRICS:
+        assert getattr(serial.best, f) == getattr(parallel.best, f), f
+    assert serial.evaluated == parallel.evaluated
+    print(f"parallel smoke OK: {parallel.evaluated} evals, "
+          f"cuts={parallel.best.cuts}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="short CI run: 2 networks, equivalence asserted, "
-                         "no JSON written")
+                    help="short CI run: 2 networks, equivalence + parallel "
+                         "bit-identity asserted, no JSON written")
+    ap.add_argument("--workers", type=int, default=os.cpu_count() or 1,
+                    help="worker processes for the end-to-end compiles "
+                         "(default: all cores)")
+    ap.add_argument("--sweep-only", action="store_true",
+                    help="re-measure only the workers sweep and splice it "
+                         "into the existing output JSON (the per-network "
+                         "table takes ~20 min; the sweep ~5)")
     ap.add_argument("-o", "--output", default="BENCH_compile.json")
     args = ap.parse_args()
+
+    if args.sweep_only:
+        payload = json.loads(Path(args.output).read_text())
+        payload["workers_sweep"] = bench_workers_sweep(
+            "yolov2", 416, worker_counts=[1, 2, 4, 8])
+        Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"updated workers_sweep in {args.output}")
+        return
 
     zoo = SMOKE_ZOO if args.smoke else ZOO
     budget = 0.4 if args.smoke else 3.0
     results = {}
     for name, size in zoo:
         results[f"{name}@{size}"] = bench_network(
-            name, size, budget, check_equiv=args.smoke)
+            name, size, budget, check_equiv=args.smoke,
+            compile_workers=1 if args.smoke else args.workers)
 
     if args.smoke:
         worst = min(r["speedup"] for r in results.values())
@@ -128,13 +271,20 @@ def main() -> None:
         # an idle machine is 3-20x)
         assert worst > 1.5, f"engine speedup regressed to {worst}x"
         print(f"smoke OK: min speedup {worst}x")
+        smoke_parallel_gate()
         return
+
+    sweep = bench_workers_sweep("yolov2", 416, worker_counts=[1, 2, 4, 8])
 
     payload = {
         "hw": KCU1500.name,
         "note": "evals/sec over product-order cut enumeration; engine is "
-                "oracle-exact (tests/test_cutpoint_engine.py)",
+                "oracle-exact (tests/test_cutpoint_engine.py) and parallel "
+                "search is bit-identical to serial "
+                "(tests/test_search_pool.py)",
+        "compile_workers": args.workers,
         "networks": results,
+        "workers_sweep": sweep,
     }
     Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {args.output}")

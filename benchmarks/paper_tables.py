@@ -6,6 +6,7 @@ Figs 16/17.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from functools import lru_cache
 
@@ -21,8 +22,12 @@ MB = 1 << 20
 @lru_cache(maxsize=None)
 def _plan(name: str, size: int, objective: str = "latency"):
     """Memoized compile: several tables hit the same (network, objective)
-    pair, and plans are immutable once built."""
-    return compile_graph(build_cnn(name, size), KCU1500, objective=objective)
+    pair, and plans are immutable once built.  Compiles with all cores --
+    yolov2's space is fully enumerable at the 8M exhaustive_limit and the
+    parallel result is bit-identical to serial (tests/test_search_pool.py),
+    so the tables are unaffected by the worker count."""
+    return compile_graph(build_cnn(name, size), KCU1500, objective=objective,
+                         workers=os.cpu_count() or 1)
 
 
 @dataclass

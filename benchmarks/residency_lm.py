@@ -8,8 +8,23 @@ For each (arch x shape) the planner chooses per transformer block between
 under the 128 MiB VMEM budget, using (a) the paper's single-cut policy and
 (b) the beyond-paper DP.  Reports HBM bytes/step/device and the est. step
 time, vs the all-streaming baseline.
+
+The per-(arch x shape) cells are independent -- one ResidencyEngine per
+stack, nothing shared -- so ``all_reports(workers=N)`` fans them out over
+the same :class:`~repro.core.search_pool.ParallelSearchDriver` pool the
+CNN cut-point search uses.
+
+Usage:
+    PYTHONPATH=src python benchmarks/residency_lm.py [--workers N]
 """
 from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ModelConfig, ShapeCell
@@ -89,16 +104,41 @@ def report(arch: str, shape: str) -> dict:
     }
 
 
+# The paper-representative (arch x shape) cells; residency_throughput.py
+# regenerates this table into BENCH_residency.json from the same list.
+CASES = [
+    ("granite-20b", "decode_32k"), ("granite-20b", "prefill_32k"),
+    ("gemma2-27b", "decode_32k"), ("moonshot-v1-16b-a3b", "decode_32k"),
+    ("smollm-360m", "decode_32k"), ("mamba2-2.7b", "decode_32k"),
+    ("qwen3-moe-235b-a22b", "decode_32k"),
+]
+
+
+def _report_pair(pair: tuple[str, str]) -> dict:
+    return report(*pair)
+
+
+def all_reports(workers: int = 1,
+                cases: list[tuple[str, str]] = CASES) -> list[dict]:
+    """Plan every (arch, shape) cell, fanning out across ``workers``
+    processes (each cell builds its own ResidencyEngine; the cells share
+    nothing, so this is the pool's embarrassingly-parallel case)."""
+    if workers <= 1 or len(cases) <= 1:
+        return [report(*pair) for pair in cases]
+    from repro.core.search_pool import ParallelSearchDriver
+    with ParallelSearchDriver(workers=min(workers, len(cases))) as driver:
+        return driver.map(_report_pair, cases)
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=os.cpu_count() or 1,
+                    help="worker processes for the per-(arch x shape) "
+                         "planning fan-out (default: all cores)")
+    args = ap.parse_args()
     print("arch,shape,streaming_hbm,dp_hbm,reduction%,streaming_ms,dp_ms,"
           "resident,vmem_mb")
-    for arch, shape in [
-        ("granite-20b", "decode_32k"), ("granite-20b", "prefill_32k"),
-        ("gemma2-27b", "decode_32k"), ("moonshot-v1-16b-a3b", "decode_32k"),
-        ("smollm-360m", "decode_32k"), ("mamba2-2.7b", "decode_32k"),
-        ("qwen3-moe-235b-a22b", "decode_32k"),
-    ]:
-        r = report(arch, shape)
+    for r in all_reports(workers=args.workers):
         print(f"{r['arch']},{r['shape']},{r['streaming_hbm_gb']}GB,"
               f"{r['dp_hbm_gb']}GB,{r['hbm_reduction_pct']}%,"
               f"{r['streaming_ms']}ms,{r['dp_ms']}ms,"

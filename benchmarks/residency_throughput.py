@@ -211,21 +211,14 @@ def bench_stack(kind: str, n: int, budget_s: float,
 
 
 def arch_table() -> list[dict]:
-    """Regenerate the residency_lm.py report rows (the numbers changed with
-    the per-device FLOPs fix and the boundary-accounting fix)."""
+    """Regenerate the residency_lm.py report rows (one row per CASES cell,
+    fanned out over the shared search-pool workers)."""
     try:
-        from residency_lm import report
+        from residency_lm import all_reports
     except ImportError:                                  # pragma: no cover
-        from benchmarks.residency_lm import report
-    rows = []
-    for arch, shape in [
-        ("granite-20b", "decode_32k"), ("granite-20b", "prefill_32k"),
-        ("gemma2-27b", "decode_32k"), ("moonshot-v1-16b-a3b", "decode_32k"),
-        ("smollm-360m", "decode_32k"), ("mamba2-2.7b", "decode_32k"),
-        ("qwen3-moe-235b-a22b", "decode_32k"),
-    ]:
-        rows.append(report(arch, shape))
-    return rows
+        from benchmarks.residency_lm import all_reports
+    import os
+    return all_reports(workers=os.cpu_count() or 1)
 
 
 def main() -> None:

@@ -1,15 +1,34 @@
 """End-to-end ShortcutFusion compiler: graph -> ExecutionPlan.
 
-Pipeline (Fig. 4): CNN parser & analyzer (grouping) -> block-wise optimizer
-(cut-point search with the reuse-aware allocator + timing/DRAM models) ->
-instruction generation.
+Pipeline (paper Fig. 4), one pass per stage:
+
+1. **Parse & analyze** -- ``grouping.group_nodes`` fuses the node graph
+   into accelerator instruction groups (conv + its post-processing chain).
+2. **Block-wise optimize** -- ``cutpoint.search`` picks a frame-/row-reuse
+   mode per residual block by searching cut positions over the monotone
+   runs of feature-map size, scoring each candidate with the reuse-aware
+   allocator (allocator.py) plus the SRAM/DRAM/latency models (sram.py /
+   dram.py / timing.py).  ``workers > 1`` parallelizes this search across
+   processes (search_pool.py) with a bit-identical result.
+3. **Generate instructions** -- ``isa.generate_instructions`` lowers the
+   winning allocation to the accelerator's register-level instruction
+   stream (one GroupInstruction per group).
+
+The result is an :class:`ExecutionPlan`: the chosen policy/allocation, the
+three analytic reports the paper tabulates (SRAM, DRAM, latency), derived
+metrics (GOPS, MAC efficiency, off-chip reduction vs. the all-row
+baseline), and the instruction stream.  Everything is static -- no
+hardware or input tensors are involved -- which is what lets
+tests/benchmarks audit the plan against the functional simulator
+(core/simulator.py) byte-for-byte.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 from repro.core.allocator import Allocation, allocate, frame_feasible
-from repro.core.cutpoint import Candidate, SearchResult, search, sweep_single_cut
+from repro.core.cutpoint import (EXHAUSTIVE_LIMIT, Candidate, SearchResult,
+                                 search, sweep_single_cut)
 from repro.core.dram import DRAMReport, baseline_total, dram_report
 from repro.core.grouping import GroupedGraph, group_nodes
 from repro.core.hw import FPGAConfig, KCU1500
@@ -68,14 +87,30 @@ class ExecutionPlan:
 
 def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
                   objective: str = "latency",
-                  policy: dict[int, str] | None = None) -> ExecutionPlan:
-    """Compile a CNN graph.  If ``policy`` is given it is used verbatim
-    (e.g. all-row baseline); otherwise the cut-point optimizer runs."""
+                  policy: dict[int, str] | None = None,
+                  exhaustive_limit: int = EXHAUSTIVE_LIMIT,
+                  workers: int | None = 1) -> ExecutionPlan:
+    """Compile a CNN graph into an :class:`ExecutionPlan`.
+
+    ``objective``, ``exhaustive_limit`` and ``workers`` are forwarded to
+    :func:`repro.core.cutpoint.search` (see its docstring for the full
+    contract); in short, ``objective`` picks what the optimizer minimizes
+    ("latency" / "sram" / "dram"), ``exhaustive_limit`` bounds the cut
+    space enumerated exhaustively before coordinate descent takes over,
+    and ``workers`` > 1 (or ``None`` for all cores) parallelizes the
+    search across processes with a bit-identical result.
+
+    If ``policy`` is given (gid -> "row"/"frame"), the optimizer is
+    skipped and the policy is compiled verbatim -- this is how the all-row
+    baseline and ablation plans are built; feasibility is still computed
+    honestly for the resulting Candidate.
+    """
     graph.validate()
     gg = group_nodes(graph)
     result: SearchResult | None = None
     if policy is None:
-        result = search(gg, hw, objective=objective)
+        result = search(gg, hw, objective=objective,
+                        exhaustive_limit=exhaustive_limit, workers=workers)
         cand = result.best
         alloc = cand.alloc
     else:
@@ -100,8 +135,13 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
 
 
 def all_row_policy(gg: GroupedGraph) -> dict[int, str]:
+    """Every group streams row-by-row: the paper's off-chip baseline
+    (eq. 9) that the optimizer's DRAM reduction is measured against."""
     return {g.gid: "row" for g in gg.groups}
 
 
 def all_frame_policy(gg: GroupedGraph) -> dict[int, str]:
+    """Every group keeps whole feature maps on-chip: the minimum-traffic /
+    maximum-SRAM corner, infeasible for large inputs but the anchor of the
+    Fig. 16/17 trade-off sweeps."""
     return {g.gid: "frame" for g in gg.groups}

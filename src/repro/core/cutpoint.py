@@ -46,10 +46,16 @@ Oracle contract: ``CutpointEngine.evaluate(cuts)`` returns the same
 ``search`` materializes its winning tuple through the oracle, so the
 returned Candidate is byte-identical to what the seed implementation
 produced.
+
+``search(workers=N)`` farms disjoint sub-spaces of the cut product to a
+process pool (see search_pool.py) with a deterministic merge; the result
+is bit-identical to serial for every worker count
+(tests/test_search_pool.py), so parallelism is purely a wall-clock knob.
 """
 from __future__ import annotations
 
 import itertools
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -325,8 +331,97 @@ class CutpointEngine:
 
 
 # ------------------------------------------------------------------ search
+# Largest cut-product space searched exhaustively; larger spaces fall back
+# to coordinate descent.  8M covers yolov2's full 7.96M-tuple space: with
+# the incremental engine one tuple costs ~100us, so the worst case is
+# ~2.5 min at 8 workers via search_pool (and ~15 min serial -- pass
+# ``workers`` when compiling detector-scale graphs).
+EXHAUSTIVE_LIMIT = 8_000_000
+
+
+def coordinate_descent(engine: "CutpointEngine", start: tuple[int, ...],
+                       objective: str, on_eval=None) -> CandidateMetrics:
+    """One coordinate descent from ``start`` to its local optimum.
+
+    The single definition of the descent trajectory -- move order, strict
+    ``<`` improvement test, tie behavior -- shared by the serial loop in
+    :func:`search` and the parallel per-start tasks in search_pool, whose
+    bit-identity contract requires both to move in lock-step.  ``on_eval``
+    (if given) observes every requested cut tuple; search_pool uses it to
+    collect the visited set that reconstructs ``evaluated``.
+    """
+    def ev(t: tuple[int, ...]) -> CandidateMetrics:
+        if on_eval is not None:
+            on_eval(t)
+        return engine.evaluate(t)
+
+    cuts = list(start)
+    cur = ev(tuple(cuts))
+    improved = True
+    while improved:
+        improved = False
+        for ri, run in enumerate(engine.runs):
+            for cand_cut in range(len(run) + 1):
+                if cand_cut == cuts[ri]:
+                    continue
+                trial = list(cuts)
+                trial[ri] = cand_cut
+                c = ev(tuple(trial))
+                if _key(c, objective) < _key(cur, objective):
+                    cur, cuts, improved = c, trial, True
+    return cur
+
+
+def descent_starts(blocks: list[Block],
+                   runs: list[list[int]]) -> list[tuple[int, ...]]:
+    """The three deterministic coordinate-descent start points: the exact
+    all-row and all-frame policies (whose cut encoding depends on each
+    run's direction) plus the run midpoints.  Shared by the serial loop
+    below and the parallel per-start tasks in search_pool, which must use
+    byte-identical starts."""
+    all_row = tuple(len(r) if _run_direction(blocks, r) < 0 else 0
+                    for r in runs)
+    all_frame = tuple(0 if _run_direction(blocks, r) < 0 else len(r)
+                      for r in runs)
+    return [all_row, all_frame, tuple(len(r) // 2 for r in runs)]
+
+
 def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
-           exhaustive_limit: int = 1_000_000) -> SearchResult:
+           exhaustive_limit: int = EXHAUSTIVE_LIMIT,
+           workers: int | None = 1) -> SearchResult:
+    """Find the best cut tuple for ``gg`` on ``hw``.
+
+    Knobs
+    -----
+    objective:
+        What "best" means; feasibility always dominates.  ``"latency"``
+        minimizes ``(infeasible, latency_cycles, sram_total)``, ``"sram"``
+        minimizes ``(infeasible, sram_total, latency_cycles)`` (paper
+        Fig. 16's minimum-SRAM point), ``"dram"`` minimizes ``(infeasible,
+        dram_total, latency_cycles)``.
+    exhaustive_limit:
+        Cut-product spaces up to this size are enumerated exhaustively
+        (guaranteed optimum); beyond it, coordinate descent with
+        deterministic restarts runs instead (exact in practice, because
+        runs interact only through shared buffer maxima).  Default
+        ``EXHAUSTIVE_LIMIT`` (8M tuples).
+    workers:
+        ``1`` (default) searches serially in-process.  ``N > 1`` farms
+        disjoint sub-spaces to ``N`` worker processes through
+        :class:`repro.core.search_pool.ParallelSearchDriver`; ``None``
+        uses ``os.cpu_count()``.  The result is bit-identical to serial
+        for every worker count -- parallelism changes wall clock only.
+
+    Returns a :class:`SearchResult` whose ``best`` Candidate is
+    materialized through the direct oracle, so it is exactly what the
+    seed implementation produced for the same graph.
+    """
+    if workers is None or workers > 1:
+        from repro.core.search_pool import ParallelSearchDriver
+        with ParallelSearchDriver(workers=workers) as driver:
+            return driver.search(gg, hw, objective=objective,
+                                 exhaustive_limit=exhaustive_limit)
+
     blocks = split_blocks(gg)
     runs = monotone_runs(blocks)
     space = 1
@@ -344,6 +439,13 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
                             runs=runs, blocks=blocks)
 
     if space <= exhaustive_limit:
+        if space > 1_000_000:
+            warnings.warn(
+                f"exhaustive cut search over {space} tuples on a single "
+                f"core (~{space / 10_000 / 60:.0f} min); pass workers=N to "
+                f"search()/compile_graph() for a bit-identical result in "
+                f"1/N the time, or lower exhaustive_limit to fall back to "
+                f"coordinate descent", RuntimeWarning, stacklevel=2)
         best: CandidateMetrics | None = None
         # product order: the last run varies fastest, so consecutive tuples
         # share the longest possible checkpoint prefix
@@ -354,33 +456,14 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
         assert best is not None
         return materialize(best)
 
-    # Coordinate descent with deterministic restarts (incl. the exact
-    # all-row and all-frame policies, whose cut encoding depends on the
-    # run direction).  Move order matches the seed implementation exactly
-    # (same trajectory, same answer); the engine's memo absorbs the tuples
-    # revisited across sweeps and restarts, and trials for a given run
-    # reuse the shared allocation prefix of all earlier runs.
-    all_row = tuple(len(r) if _run_direction(blocks, r) < 0 else 0
-                    for r in runs)
-    all_frame = tuple(0 if _run_direction(blocks, r) < 0 else len(r)
-                      for r in runs)
-    starts = [all_row, all_frame, tuple(len(r) // 2 for r in runs)]
+    # Coordinate descent with deterministic restarts (descent_starts).
+    # Move order matches the seed implementation exactly (same trajectory,
+    # same answer); the engine's memo absorbs the tuples revisited across
+    # sweeps and restarts, and trials for a given run reuse the shared
+    # allocation prefix of all earlier runs.
     best = None
-    for start in starts:
-        cuts = list(start)
-        cur = engine.evaluate(tuple(cuts))
-        improved = True
-        while improved:
-            improved = False
-            for ri, run in enumerate(runs):
-                for cand_cut in range(len(run) + 1):
-                    if cand_cut == cuts[ri]:
-                        continue
-                    trial = list(cuts)
-                    trial[ri] = cand_cut
-                    c = engine.evaluate(tuple(trial))
-                    if _key(c, objective) < _key(cur, objective):
-                        cur, cuts, improved = c, trial, True
+    for start in descent_starts(blocks, runs):
+        cur = coordinate_descent(engine, start, objective)
         if best is None or _key(cur, objective) < _key(best, objective):
             best = cur
     assert best is not None

@@ -7,6 +7,25 @@ producer chain -- exactly the fusions the back-end accelerator supports
 (output of the MAC array forwarded through the post-processing chain without
 a memory round-trip).  Concat/route stay standalone (feature-merging is a
 redirect, Fig. 5 discussion).
+
+A :class:`Group` is the unit everything downstream operates on: the
+allocator assigns each group's output a buffer (or a DRAM round-trip), the
+cut-point optimizer assigns each group a reuse mode via its residual
+*block* (cutpoint.split_blocks aggregates groups back into blocks), the
+cost models charge traffic/latency per group, and the ISA emits exactly
+one instruction per group.  Group ids are dense and topological --
+``groups[i].gid == i`` -- and every derived quantity (sizes, MACs, fused
+add, dual output) is a property over the member nodes, so a Group never
+caches state that could go stale under graph edits.
+
+:class:`GroupedGraph` additionally carries three topology caches filled
+once by :func:`group_nodes` -- per-group inputs, consumers, and the
+shortcut-source map -- because the allocator and the cost models query
+group topology inside the O(N^k) cut-point search where a dict lookup
+matters.  The caches are private to this module; callers use the
+``group_inputs`` / ``group_consumers`` / ``shortcut_source_group``
+accessors.  The input image maps to pseudo-group ``-1`` (it owns no
+buffer and no instruction).
 """
 from __future__ import annotations
 
@@ -135,7 +154,20 @@ class GroupedGraph:
 
 
 def group_nodes(graph: Graph) -> GroupedGraph:
-    """Greedy chain fusion (the paper's analyzer, Fig. 5a)."""
+    """Greedy chain fusion (the paper's analyzer, Fig. 5a).
+
+    Each compute node (conv/dwconv/fc) opens a group and absorbs the
+    linear chain of FUSABLE post-processing nodes that immediately follows
+    it -- a successor fuses only if it is the next node in topological
+    order and consumes the current tail as its main input, i.e. the chain
+    the accelerator can stream through without a memory round-trip.  A
+    node with multiple consumers ends the chain, with one exception
+    (Fig. 13d): a depthwise conv that feeds both the main path and an SE
+    global-pool keeps the pooled copy in-group (``dual_output``), because
+    the hardware produces it on the fly.  Non-compute nodes that nothing
+    absorbed (concat, route, standalone adds/pools) become single-node
+    groups.
+    """
     groups: list[Group] = []
     node_group: dict[int, int] = {}
     consumed: set[int] = set()

@@ -1,0 +1,275 @@
+"""Parallel cut-space search pool (ROADMAP: parallel candidate evaluation).
+
+The cut-point optimizer's exhaustive path walks the cross-product of cut
+positions, one per monotone run (see cutpoint.py).  PR 1 made a single
+candidate cheap (:class:`~repro.core.cutpoint.CutpointEngine`); the wall
+clock is now dominated by the sheer size of the product space -- yolov2
+alone is ~7.9M tuples.  :class:`ParallelSearchDriver` farms that space out
+to a ``multiprocessing`` worker pool:
+
+* **Partitioning** -- the product space is split into disjoint sub-spaces
+  along the *leading* monotone-run axes: the smallest prefix of runs whose
+  dimension product reaches ``~8 tasks per worker`` is enumerated in the
+  parent, and each resulting prefix tuple becomes one task covering
+  ``prefix x product(remaining runs)``.  Every task therefore has exactly
+  the same size (uniform load) and walks its suffix in ``itertools.product``
+  order, so within a task consecutive tuples still share the longest
+  possible allocator-checkpoint prefix.
+* **Per-worker engines** -- each worker process builds its own
+  ``CutpointEngine`` for the (graph, hardware) pair, once per search, and
+  keeps it across all tasks of that search.  Engine checkpoints are
+  per-prefix state, so workers share nothing and need no synchronisation.
+  The graph is *serialized* once per search; the resulting ``bytes`` ride
+  along with every task (a per-task pipe copy of tens of KB -- negligible
+  next to the sub-space walk), and workers deserialize it only when their
+  cached engine token changes, i.e. once per search.
+* **Deterministic merge** -- each task returns its sub-space argmin as a
+  :class:`~repro.core.cutpoint.CandidateMetrics`.  The parent reduces them
+  with the key ``(objective key, cut tuple)``.  Serial ``search`` keeps the
+  *first* optimum in product order, and product order over ``range`` axes
+  *is* lexicographic order of the tuples, so this merge reproduces the
+  serial winner bit-for-bit -- same cuts, same metrics, same
+  ``SearchResult.evaluated`` -- regardless of worker count or scheduling.
+
+When the space exceeds ``exhaustive_limit`` the serial fallback is
+coordinate descent from three deterministic starts; the pool then runs one
+*start* per task.  A start's trajectory depends only on exact candidate
+values (never on the shared memo, which only short-circuits re-evaluation),
+so per-start results are identical to serial, ties between starts break by
+start order exactly as the serial loop's strict ``<`` does, and
+``evaluated`` is recovered as the size of the union of the per-start
+visited-tuple sets -- the same count the serial shared-memo engine reports.
+
+The pool is generic: :meth:`ParallelSearchDriver.map` exposes it for any
+embarrassingly-parallel loop (``benchmarks/residency_lm.py`` uses it for
+per-arch/per-shape residency planning).
+
+Failure semantics: an exception raised inside a worker (e.g. an invalid
+``objective``) propagates to the caller unchanged, exactly as the serial
+path would raise it; a worker process that dies outright surfaces as a
+``RuntimeError`` naming the crashed pool rather than a hang.
+"""
+from __future__ import annotations
+
+import itertools
+import multiprocessing as mp
+import os
+import pickle
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
+
+from repro.core import cutpoint as _cp
+
+# Sub-space tasks created per worker on the exhaustive path.  More tasks
+# than workers smooths the tail (tasks are equal-sized, but workers may not
+# be equally fast); the per-task cost is one small pickle round-trip.
+TASKS_PER_WORKER = 8
+
+# Below this many tuples the pool's fixed costs (process startup, one
+# engine build per worker) exceed the search itself; the driver silently
+# runs the serial path, which is bit-identical anyway.
+MIN_PARALLEL_SPACE = 4096
+
+
+# ---------------------------------------------------------- worker globals
+# One engine per worker process, rebuilt when the search token changes.  A
+# fresh token per `ParallelSearchDriver.search` call keeps the engine's memo
+# in the exact state the serial implementation's fresh engine has, which is
+# what makes `evaluated` (a cache-miss count) reproducible.
+_ENGINE_TOKEN: tuple | None = None
+_ENGINE: "_cp.CutpointEngine | None" = None
+
+# Test hook (tests/test_search_pool.py): set to "raise" / "exit" in the
+# parent before the pool is created; fork-started workers inherit it.
+_TEST_FAIL_HOOK: str | None = None
+
+
+def _worker_engine(token: tuple, payload: bytes) -> "_cp.CutpointEngine":
+    global _ENGINE_TOKEN, _ENGINE
+    if token != _ENGINE_TOKEN:
+        gg, hw = pickle.loads(payload)
+        _ENGINE = _cp.CutpointEngine(gg, hw)
+        _ENGINE_TOKEN = token
+    return _ENGINE
+
+
+def _maybe_fail() -> None:
+    if _TEST_FAIL_HOOK == "raise":
+        raise RuntimeError("search_pool test hook: simulated worker failure")
+    if _TEST_FAIL_HOOK == "exit":          # hard crash, no exception
+        os._exit(3)
+
+
+def _run_subspace(task) -> tuple["_cp.CandidateMetrics", int]:
+    """Evaluate ``prefix x product(suffix_dims)``; return (argmin, #evals).
+
+    Ties keep the first optimum in product order, as serial search does.
+    """
+    token, payload, prefix, suffix_dims, objective = task
+    _maybe_fail()
+    engine = _worker_engine(token, payload)
+    before = engine.evaluations
+    best = None
+    for suffix in itertools.product(*[range(d + 1) for d in suffix_dims]):
+        c = engine.evaluate(prefix + suffix, memoize=False)
+        if best is None or _cp._key(c, objective) < _cp._key(best, objective):
+            best = c
+    return best, engine.evaluations - before
+
+
+def _run_descent(task) -> tuple["_cp.CandidateMetrics", frozenset]:
+    """One coordinate-descent start; returns (final point, visited tuples).
+
+    Runs ``cutpoint.coordinate_descent`` itself -- the one definition of
+    the descent trajectory -- so the returned point is the one the serial
+    loop reaches from this start, by construction.
+    """
+    token, payload, start, objective = task
+    _maybe_fail()
+    engine = _worker_engine(token, payload)
+    visited: set[tuple[int, ...]] = set()
+    cur = _cp.coordinate_descent(engine, start, objective,
+                                 on_eval=visited.add)
+    return cur, frozenset(visited)
+
+
+def partition_space(runs: list[list[int]],
+                    target_tasks: int) -> tuple[list[tuple[int, ...]],
+                                                list[int]]:
+    """Split the cut product space along the leading monotone-run axes.
+
+    Takes the smallest ``k`` such that the first ``k`` axes enumerate at
+    least ``target_tasks`` prefixes (or all axes, for small spaces) and
+    returns ``(prefixes, suffix_dims)``: every ``prefix x
+    product(range(d+1) for d in suffix_dims)`` is one equal-sized, disjoint
+    sub-space, and concatenating them in prefix order reproduces the full
+    product enumeration order.
+    """
+    k, tasks = 0, 1
+    while k < len(runs) and tasks < target_tasks:
+        tasks *= len(runs[k]) + 1
+        k += 1
+    prefixes = list(itertools.product(*[range(len(r) + 1)
+                                        for r in runs[:k]]))
+    suffix_dims = [len(r) for r in runs[k:]]
+    return prefixes, suffix_dims
+
+
+class ParallelSearchDriver:
+    """Persistent worker pool for cut-space search and generic fan-out.
+
+    Parameters
+    ----------
+    workers:
+        Worker process count; ``None`` means ``os.cpu_count()``.
+    mp_context:
+        ``multiprocessing`` start method.  Default: ``"fork"`` where
+        available (workers inherit the parent's imports, so startup is
+        milliseconds), else the platform default.
+
+    The pool is created lazily on first use and reused across calls; use
+    the driver as a context manager (or call :meth:`close`) to reap the
+    worker processes deterministically.
+    """
+
+    def __init__(self, workers: int | None = None,
+                 mp_context: str | None = None):
+        self.workers = max(1, workers or os.cpu_count() or 1)
+        if mp_context is None and "fork" in mp.get_all_start_methods():
+            mp_context = "fork"
+        self._ctx = mp.get_context(mp_context) if mp_context else None
+        self._pool: ProcessPoolExecutor | None = None
+        self._searches = 0
+
+    # ------------------------------------------------------------- plumbing
+    def _executor(self) -> ProcessPoolExecutor:
+        if self._pool is None:
+            self._pool = ProcessPoolExecutor(max_workers=self.workers,
+                                             mp_context=self._ctx)
+        return self._pool
+
+    def map(self, fn, items, chunksize: int = 1) -> list:
+        """Ordered parallel map (the generic face of the pool).
+
+        ``fn`` must be a module-level callable; results come back in input
+        order.  Worker exceptions propagate; a dead worker process raises
+        ``RuntimeError`` instead of hanging the caller.
+        """
+        try:
+            return list(self._executor().map(fn, items, chunksize=chunksize))
+        except BrokenProcessPool as e:
+            self._reset()
+            raise RuntimeError(
+                f"search-pool worker process died (workers={self.workers}); "
+                f"the pool has been discarded") from e
+
+    def _reset(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self) -> "ParallelSearchDriver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # --------------------------------------------------------------- search
+    def search(self, gg, hw, objective: str = "latency",
+               exhaustive_limit: int | None = None,
+               min_parallel_space: int = MIN_PARALLEL_SPACE):
+        """Parallel ``cutpoint.search``, bit-identical to the serial result.
+
+        Same knobs as :func:`repro.core.cutpoint.search`; additionally
+        ``min_parallel_space`` sets the space size below which the serial
+        path runs directly (the result is identical either way -- this is
+        purely a fixed-cost cutoff).
+        """
+        if exhaustive_limit is None:
+            exhaustive_limit = _cp.EXHAUSTIVE_LIMIT
+        blocks = _cp.split_blocks(gg)
+        runs = _cp.monotone_runs(blocks)
+        space = 1
+        for r in runs:
+            space *= len(r) + 1
+        exhaustive = space <= exhaustive_limit
+        if (self.workers <= 1 or not runs
+                or (exhaustive and space < min_parallel_space)):
+            return _cp.search(gg, hw, objective=objective,
+                              exhaustive_limit=exhaustive_limit)
+
+        self._searches += 1
+        token = (os.getpid(), id(self), self._searches)
+        payload = pickle.dumps((gg, hw), protocol=pickle.HIGHEST_PROTOCOL)
+
+        if exhaustive:
+            prefixes, suffix_dims = partition_space(
+                runs, self.workers * TASKS_PER_WORKER)
+            tasks = [(token, payload, p, suffix_dims, objective)
+                     for p in prefixes]
+            results = self.map(_run_subspace, tasks)
+            evaluated = sum(n for _, n in results)
+            # (objective key, cut tuple) == first optimum in product order.
+            best = min((m for m, _ in results),
+                       key=lambda m: (_cp._key(m, objective), m.cuts))
+        else:
+            starts = _cp.descent_starts(blocks, runs)
+            tasks = [(token, payload, s, objective) for s in starts]
+            results = self.map(_run_descent, tasks)
+            visited: set = set()
+            best = None
+            for m, seen in results:             # start order; strict < as
+                visited |= seen                 # the serial loop over starts
+                if best is None or (_cp._key(m, objective)
+                                    < _cp._key(best, objective)):
+                    best = m
+            evaluated = len(visited)
+
+        cand = _cp.evaluate(gg, blocks, runs, best.cuts, hw)
+        return _cp.SearchResult(best=cand, evaluated=evaluated,
+                                runs=runs, blocks=blocks)

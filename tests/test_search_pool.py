@@ -1,0 +1,149 @@
+"""Parallel cut-space search: bit-identity with serial + failure modes.
+
+``search(workers=N)`` must return a ``SearchResult`` bit-identical to the
+serial path on every zoo CNN -- same winning Candidate (cuts, metrics,
+policy, allocation), same ``evaluated`` count, same runs/blocks -- on both
+the partitioned-exhaustive path and the per-start coordinate-descent
+fallback.  Worker failures must surface as errors in the parent, never as
+hangs or silently-wrong results.
+"""
+import itertools
+import multiprocessing as mp
+
+import pytest
+
+from repro.cnn import build_cnn
+from repro.core import search_pool
+from repro.core.cutpoint import search
+from repro.core.grouping import group_nodes
+from repro.core.hw import KCU1500
+from repro.core.search_pool import ParallelSearchDriver, partition_space
+
+ALL_CNNS = ["vgg16-conv", "yolov2", "yolov3", "resnet50", "resnet152",
+            "efficientnet-b1", "retinanet", "mobilenet-v3"]
+
+METRICS = ["latency_cycles", "dram_total", "dram_fm", "sram_total",
+           "bram18k", "feasible"]
+
+# Keeps the test exhaustive on resnet50/152 (space 8748, partitioned
+# across workers) while yolov2/yolov3/efficientnet/retinanet/mobilenet
+# exercise the parallel coordinate-descent fallback -- the same split the
+# default 8M limit produces, minus yolov2's quarter-hour exhaustive walk.
+TEST_LIMIT = 200_000
+
+HAS_FORK = "fork" in mp.get_all_start_methods()
+
+
+def assert_results_identical(serial, parallel, ctx=""):
+    assert serial.best.cuts == parallel.best.cuts, ctx
+    for f in METRICS:
+        assert getattr(serial.best, f) == getattr(parallel.best, f), (
+            f"{ctx}: {f} serial={getattr(serial.best, f)!r} "
+            f"parallel={getattr(parallel.best, f)!r}")
+    assert serial.best.policy == parallel.best.policy, ctx
+    assert serial.best.alloc.buff == parallel.best.alloc.buff, ctx
+    assert serial.best.alloc.spilled == parallel.best.alloc.spilled, ctx
+    assert (serial.best.alloc.boundary_writes
+            == parallel.best.alloc.boundary_writes), ctx
+    assert (serial.best.alloc.boundary_reads
+            == parallel.best.alloc.boundary_reads), ctx
+    assert serial.evaluated == parallel.evaluated, ctx
+    assert serial.runs == parallel.runs, ctx
+    assert serial.blocks == parallel.blocks, ctx
+
+
+@pytest.mark.parametrize("name", ALL_CNNS)
+def test_parallel_matches_serial(name):
+    gg = group_nodes(build_cnn(name))
+    serial = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+    parallel = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT, workers=2)
+    assert_results_identical(serial, parallel, ctx=name)
+
+
+def test_parallel_matches_serial_forced_coordinate_descent():
+    """exhaustive_limit=1 forces the descent fallback even on a small
+    space: one worker task per deterministic start, ties broken by start
+    order, evaluated = |union of per-start visited tuples|."""
+    gg = group_nodes(build_cnn("resnet50", 224))
+    serial = search(gg, KCU1500, exhaustive_limit=1)
+    parallel = search(gg, KCU1500, exhaustive_limit=1, workers=2)
+    assert_results_identical(serial, parallel, ctx="forced-descent")
+
+
+def test_parallel_exhaustive_below_min_space_cutoff():
+    """Forcing the pool onto a tiny space (min_parallel_space=1) must
+    still merge to the serial product-order argmin."""
+    gg = group_nodes(build_cnn("vgg16-conv", 224))
+    serial = search(gg, KCU1500)
+    with ParallelSearchDriver(workers=2) as driver:
+        parallel = driver.search(gg, KCU1500, min_parallel_space=1)
+    assert_results_identical(serial, parallel, ctx="tiny-exhaustive")
+
+
+def test_partition_space_is_disjoint_ordered_cover():
+    runs = [[0, 1], [2], [3, 4, 5], [6, 7]]
+    prefixes, suffix_dims = partition_space(runs, target_tasks=5)
+    assert len(prefixes) >= 5
+    dims = [range(len(r) + 1) for r in runs]
+    full = list(itertools.product(*dims))
+    covered = [p + s for p in prefixes
+               for s in itertools.product(*[range(d + 1)
+                                            for d in suffix_dims])]
+    assert covered == full            # disjoint, complete, product order
+
+    # degenerate: target larger than the space -> one task per tuple
+    prefixes, suffix_dims = partition_space(runs, target_tasks=10**9)
+    assert suffix_dims == []
+    assert prefixes == full
+
+
+def test_driver_map_is_ordered_and_reusable():
+    with ParallelSearchDriver(workers=2) as driver:
+        assert driver.map(abs, [-3, 1, -2]) == [3, 1, 2]
+        # the same pool serves a search afterwards
+        gg = group_nodes(build_cnn("resnet50", 224))
+        result = driver.search(gg, KCU1500)
+        assert result.best.feasible
+        assert driver.map(abs, [-1]) == [1]
+
+
+def test_worker_exception_surfaces_as_error():
+    """An exception raised inside a worker (here: invalid objective, the
+    same ValueError the serial path raises) propagates to the caller."""
+    gg = group_nodes(build_cnn("resnet50", 224))
+    with pytest.raises(ValueError):
+        search(gg, KCU1500, objective="bogus", workers=2)
+
+
+@pytest.mark.skipif(not HAS_FORK, reason="fork start method required to "
+                    "inject the crash hook into workers")
+def test_worker_hard_crash_surfaces_as_runtime_error():
+    """A worker that dies without raising (os._exit) must surface as a
+    RuntimeError naming the pool -- not hang -- and the driver must be
+    usable again once the fault is gone."""
+    gg = group_nodes(build_cnn("resnet50", 224))
+    driver = ParallelSearchDriver(workers=2, mp_context="fork")
+    search_pool._TEST_FAIL_HOOK = "exit"
+    try:
+        with pytest.raises(RuntimeError, match="worker process died"):
+            driver.search(gg, KCU1500)
+    finally:
+        search_pool._TEST_FAIL_HOOK = None
+    try:
+        result = driver.search(gg, KCU1500)      # fresh pool, healthy
+        assert_results_identical(search(gg, KCU1500), result, ctx="revive")
+    finally:
+        driver.close()
+
+
+@pytest.mark.skipif(not HAS_FORK, reason="fork start method required to "
+                    "inject the crash hook into workers")
+def test_worker_raised_hook_propagates():
+    gg = group_nodes(build_cnn("resnet50", 224))
+    search_pool._TEST_FAIL_HOOK = "raise"
+    try:
+        with pytest.raises(RuntimeError, match="simulated worker failure"):
+            with ParallelSearchDriver(workers=2, mp_context="fork") as d:
+                d.search(gg, KCU1500)
+    finally:
+        search_pool._TEST_FAIL_HOOK = None
