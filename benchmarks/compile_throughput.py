@@ -1,28 +1,37 @@
-"""Compiler-throughput benchmark: incremental engine vs direct evaluator.
+"""Compiler-throughput benchmark: batched scorer vs engine vs oracle.
 
 For every CNN-zoo network, measures
   * candidate evaluations/sec of the direct oracle (``cutpoint.evaluate``:
     full allocate + whole-graph reports per tuple, the seed inner loop),
-  * candidate evaluations/sec of :class:`CutpointEngine` over the same
-    product-order enumeration the exhaustive search walks,
+  * candidate evaluations/sec of :class:`CutpointEngine` per tuple over
+    the same product-order enumeration the exhaustive search walks,
+  * candidate evaluations/sec of ``CutpointEngine.score_batch`` (the
+    mask-matrix batched scorer the search uses by default),
   * end-to-end ``compile_graph`` wall time (at ``--workers``, since the
     default 8M ``exhaustive_limit`` makes yolov2's 7.96M-tuple space fully
     enumerable),
-plus a **workers sweep**: the same fixed slice of yolov2's partitioned cut
-space pushed through the search pool at 1/2/4/8 workers, recording wall
-time, evals/sec and speedup (with ``cpu_count`` alongside -- scaling
-plateaus at the physical core count).  Everything lands in
-``BENCH_compile.json``.  The engine numbers are only meaningful because the
-engine is oracle-exact -- equivalence is enforced by
-tests/test_cutpoint_engine.py, and serial/parallel search bit-identity by
-tests/test_search_pool.py; both are spot-checked here in smoke mode.
+plus a **batched slice** (the headline): a fixed slice of yolov2's
+partitioned cut space scored per-tuple and batched, interleaved
+best-of-N per mode so this container's CPU-burst variance mostly cancels,
+with the PR 3 per-tuple engine rate as the committed reference point; and
+a **workers sweep**: the same kind of slice pushed through the search
+pool at 1/2/4/8 workers.  Everything lands in ``BENCH_compile.json``.
+The numbers are only meaningful because the engine and the batched scorer
+are oracle-exact -- equivalence is enforced by
+tests/test_cutpoint_engine.py and tests/test_score_batch.py, and
+serial/parallel search bit-identity by tests/test_search_pool.py; all are
+spot-checked here in smoke mode.
 
 Usage:
     PYTHONPATH=src python benchmarks/compile_throughput.py [--smoke] [-o F]
 
-``--smoke`` runs two small networks with short budgets and asserts the
-engine/oracle agreement plus serial-vs-parallel search bit-identity
-instead of writing the JSON (CI regression gate).
+``--smoke`` (the CI regression gate) runs two small networks with short
+budgets, asserts engine/oracle/batched agreement plus serial-vs-parallel
+bit-identity, and compares the batched scorer's evals/sec against the
+committed floor in BENCH_compile.json -- normalized by the busy-loop
+calibration so a slow CI machine doesn't trip it -- failing on >30%
+regression.  It writes its measurements to BENCH_smoke.json (uploaded as
+a CI artifact) instead of touching the committed JSON.
 """
 from __future__ import annotations
 
@@ -39,12 +48,19 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.cnn import build_cnn                                  # noqa: E402
 from repro.core.compiler import compile_graph                    # noqa: E402
-from repro.core.cutpoint import (CutpointEngine, _key, evaluate,  # noqa: E402
+from repro.core.cutpoint import (DEFAULT_BATCH_SIZE,             # noqa: E402
+                                 CutpointEngine, _key, evaluate,
                                  monotone_runs, search, split_blocks)
 from repro.core.grouping import group_nodes                      # noqa: E402
 from repro.core.hw import KCU1500                                # noqa: E402
 from repro.core.search_pool import (ParallelSearchDriver,        # noqa: E402
                                     _run_subspace, partition_space)
+
+# PR 3's committed per-tuple engine rate on the yolov2 slice (this
+# machine, BENCH_compile.json workers_sweep["1"] before the batched
+# scorer landed) -- the reference the batched slice's speedup is gated
+# against.
+PR3_SLICE_EVALS_PER_SEC = 11387.9
 
 ZOO = [("vgg16-conv", 224), ("yolov2", 416), ("yolov3", 416),
        ("resnet50", 224), ("resnet152", 224), ("efficientnet-b1", 256),
@@ -64,6 +80,22 @@ def _burn(n: int) -> int:
     for i in range(n):
         x += i * i
     return x
+
+
+def measure_busyloop_rate(n: int = 10_000_000) -> float:
+    """Single-core busy-loop calibration: pure-Python ops/sec of ``_burn``.
+
+    The smoke regression gate normalizes the committed evals/sec floor by
+    the ratio of this rate (measured on the gating machine, right next to
+    the measurement) to the rate committed alongside the floor, so the
+    gate tracks scorer regressions rather than machine-speed differences.
+    Best of two runs -- containers deliver bursty CPU."""
+    best = 0.0
+    for _ in range(2):
+        t0 = time.perf_counter()
+        _burn(n)
+        best = max(best, n / (time.perf_counter() - t0))
+    return best
 
 
 def measure_parallel_capacity(workers: int, n: int = 20_000_000) -> float:
@@ -119,8 +151,8 @@ def bench_workers_sweep(name: str, size: int, worker_counts: list[int],
     base_eps = None
     for w in worker_counts:
         token = ("sweep", name, size, w)
-        tasks = [(token, payload, p, suffix_dims, "latency")
-                 for p in prefixes]
+        tasks = [(token, payload, p, suffix_dims, "latency",
+                  DEFAULT_BATCH_SIZE) for p in prefixes]
         t0 = time.perf_counter()
         if w == 1:
             results = [_run_subspace(t) for t in tasks]
@@ -158,6 +190,70 @@ def bench_workers_sweep(name: str, size: int, worker_counts: list[int],
     }
 
 
+def bench_batched_slice(name: str = "yolov2", size: int = 416,
+                        n_tasks: int = 8, reps: int = 2) -> dict:
+    """Headline measurement: batched vs per-tuple scoring on a fixed
+    exhaustive sub-space slice of the detector's cut product.
+
+    Runs the *same* ``_run_subspace`` worker body both ways
+    (``batch_size=1`` vs the production default), interleaved
+    ``reps`` times with best-of per mode so the container's bursty CPU
+    mostly cancels, and asserts both modes merge to the same argmin.
+    The recorded speedups are (a) batched vs the per-tuple rate measured
+    in this same run and (b) batched vs the PR 3 per-tuple engine rate
+    committed in BENCH_compile.json before the batched scorer existed."""
+    gg = group_nodes(build_cnn(name, size))
+    blocks = split_blocks(gg)
+    runs = monotone_runs(blocks)
+    prefixes, suffix_dims = partition_space(runs, target_tasks=64)
+    prefixes = prefixes[:n_tasks]
+    task_size = 1
+    for d in suffix_dims:
+        task_size *= d + 1
+    tuples = len(prefixes) * task_size
+    payload = pickle.dumps((gg, KCU1500), protocol=pickle.HIGHEST_PROTOCOL)
+
+    modes = [("per_tuple", 1), ("batched", DEFAULT_BATCH_SIZE)]
+    best_eps = {m: 0.0 for m, _ in modes}
+    argmins = set()
+    for rep in range(reps):
+        for mode, bs in modes:
+            token = ("slice", name, size, mode, rep)
+            tasks = [(token, payload, p, suffix_dims, "latency", bs)
+                     for p in prefixes]
+            t0 = time.perf_counter()
+            results = [_run_subspace(t) for t in tasks]
+            wall = time.perf_counter() - t0
+            evals = sum(n for _, n in results)
+            assert evals == tuples
+            best = min((m for m, _ in results),
+                       key=lambda m: (_key(m, "latency"), m.cuts))
+            argmins.add(best.cuts)
+            eps = evals / wall
+            best_eps[mode] = max(best_eps[mode], eps)
+            print(f"batched slice {name} rep{rep} {mode}: "
+                  f"{wall:.1f}s {eps:.0f} evals/s")
+    assert len(argmins) == 1, "batched/per-tuple argmin must agree"
+    speedup = best_eps["batched"] / best_eps["per_tuple"]
+    vs_pr3 = best_eps["batched"] / PR3_SLICE_EVALS_PER_SEC
+    print(f"batched slice: {speedup:.2f}x vs same-run per-tuple, "
+          f"{vs_pr3:.2f}x vs PR3 engine ({PR3_SLICE_EVALS_PER_SEC}/s)")
+    return {
+        "network": f"{name}@{size}",
+        "tuples": tuples,
+        "tasks": len(prefixes),
+        "batch_size": DEFAULT_BATCH_SIZE,
+        "reps": reps,
+        "per_tuple_evals_per_sec": round(best_eps["per_tuple"], 1),
+        "batched_evals_per_sec": round(best_eps["batched"], 1),
+        "speedup_vs_per_tuple": round(speedup, 2),
+        "pr3_per_tuple_evals_per_sec": PR3_SLICE_EVALS_PER_SEC,
+        "speedup_vs_pr3_engine": round(vs_pr3, 2),
+        "note": "interleaved best-of per mode on one fixed exhaustive "
+                "slice; identical argmin asserted across modes",
+    }
+
+
 def bench_network(name: str, size: int, budget_s: float,
                   check_equiv: bool = False,
                   compile_workers: int = 1) -> dict:
@@ -189,13 +285,33 @@ def bench_network(name: str, size: int, budget_s: float,
             break
     engine_eps = n_engine / (time.perf_counter() - t0)
 
+    # batched scorer throughput over the same enumeration order (the
+    # production search inner loop since the mask-matrix scorer landed)
+    engine_b = CutpointEngine(gg, KCU1500, blocks, runs)
+    n_batched = 0
+    it = _product_tuples(runs)
+    t0 = time.perf_counter()
+    while True:
+        chunk = list(itertools.islice(it, DEFAULT_BATCH_SIZE))
+        if not chunk:
+            break
+        engine_b.score_batch(chunk, memoize=False)
+        n_batched += len(chunk)
+        if time.perf_counter() - t0 > budget_s:
+            break
+    batched_eps = n_batched / (time.perf_counter() - t0)
+
     if check_equiv:
         fresh = CutpointEngine(gg, KCU1500, blocks, runs)
-        for cuts in itertools.islice(_product_tuples(runs), 10):
+        fresh_b = CutpointEngine(gg, KCU1500, blocks, runs)
+        sample = list(itertools.islice(_product_tuples(runs), 10))
+        for cuts, m_b in zip(sample, fresh_b.score_batch(sample,
+                                                         memoize=False)):
             o = evaluate(gg, blocks, runs, cuts, KCU1500)
             m = fresh.evaluate(cuts)
             for f in METRICS:
                 assert getattr(o, f) == getattr(m, f), (name, cuts, f)
+                assert getattr(o, f) == getattr(m_b, f), (name, cuts, f)
 
     # end-to-end compile (grouping + search + instruction generation)
     graph = build_cnn(name, size)
@@ -208,14 +324,55 @@ def bench_network(name: str, size: int, budget_s: float,
         "search_space": space,
         "direct_evals_per_sec": round(direct_eps, 1),
         "engine_evals_per_sec": round(engine_eps, 1),
+        "batched_evals_per_sec": round(batched_eps, 1),
         "speedup": round(engine_eps / direct_eps, 2),
+        "batched_speedup_vs_engine": round(batched_eps / engine_eps, 2),
         "compile_wall_s": round(compile_s, 3),
         "search_evaluations": plan.search.evaluated if plan.search else 0,
     }
     print(f"{name}: space={space} direct={direct_eps:.0f}/s "
-          f"engine={engine_eps:.0f}/s speedup={row['speedup']}x "
-          f"compile={compile_s:.2f}s")
+          f"engine={engine_eps:.0f}/s batched={batched_eps:.0f}/s "
+          f"speedup={row['speedup']}x compile={compile_s:.2f}s")
     return row
+
+
+def smoke_batched_gate(results: dict, committed_path: Path) -> dict:
+    """Benchmark-regression gate: the batched scorer's measured evals/sec
+    must stay within ``max_regression`` of the committed floor, after
+    normalizing by the busy-loop calibration ratio (so the gate compares
+    scorer efficiency, not machine speed).  Returns the gate record that
+    lands in BENCH_smoke.json."""
+    rate = measure_busyloop_rate()
+    floor = None
+    if committed_path.exists():
+        floor = json.loads(committed_path.read_text()).get("smoke_floor")
+    record: dict = {
+        "busyloop_ops_per_sec": round(rate, 1),
+        "measured": {n: r["batched_evals_per_sec"]
+                     for n, r in results.items()},
+    }
+    if not floor:
+        print("smoke gate: no committed smoke_floor -- measuring only")
+        return record
+    net = floor["network"]
+    measured = results[net]["batched_evals_per_sec"]
+    speed = rate / floor["busyloop_ops_per_sec"]
+    need = floor["batched_evals_per_sec"] * speed * (1 - floor["max_regression"])
+    record.update({
+        "floor_network": net,
+        "floor_evals_per_sec": floor["batched_evals_per_sec"],
+        "machine_speed_vs_floor": round(speed, 3),
+        "required_evals_per_sec": round(need, 1),
+        "passed": measured >= need,
+    })
+    assert measured >= need, (
+        f"batched-scorer regression gate: {net} measured {measured:.0f} "
+        f"evals/s < required {need:.0f} (committed floor "
+        f"{floor['batched_evals_per_sec']:.0f} x machine speed "
+        f"{speed:.2f} x {1 - floor['max_regression']:.2f})")
+    print(f"batched gate OK: {net} {measured:.0f} evals/s >= "
+          f"{need:.0f} required (machine speed {speed:.2f}x vs floor)")
+    return record
 
 
 def smoke_parallel_gate() -> None:
@@ -271,19 +428,44 @@ def main() -> None:
         # an idle machine is 3-20x)
         assert worst > 1.5, f"engine speedup regressed to {worst}x"
         print(f"smoke OK: min speedup {worst}x")
+        committed = Path(__file__).resolve().parent.parent / args.output
+        gate = smoke_batched_gate(results, committed)
         smoke_parallel_gate()
+        smoke_out = Path("BENCH_smoke.json")
+        smoke_out.write_text(json.dumps(
+            {"networks": results, "batched_gate": gate}, indent=2) + "\n")
+        print(f"wrote {smoke_out} (CI artifact; committed JSON untouched)")
         return
 
     sweep = bench_workers_sweep("yolov2", 416, worker_counts=[1, 2, 4, 8])
+    batched_slice = bench_batched_slice("yolov2", 416)
+
+    # the floor the CI smoke gate regresses against: the batched scorer's
+    # rate on SMOKE_ZOO[1] (resnet50 -- the larger smoke network, whose
+    # measurement window is the least noisy), next to this machine's
+    # busy-loop calibration
+    floor_net = f"{SMOKE_ZOO[1][0]}@{SMOKE_ZOO[1][1]}"
+    smoke_floor = {
+        "network": floor_net,
+        "batched_evals_per_sec": results[floor_net]["batched_evals_per_sec"],
+        "busyloop_ops_per_sec": round(measure_busyloop_rate(), 1),
+        "max_regression": 0.30,
+    }
 
     payload = {
         "hw": KCU1500.name,
-        "note": "evals/sec over product-order cut enumeration; engine is "
-                "oracle-exact (tests/test_cutpoint_engine.py) and parallel "
-                "search is bit-identical to serial "
-                "(tests/test_search_pool.py)",
+        "note": "evals/sec over product-order cut enumeration; engine and "
+                "batched scorer are oracle-exact "
+                "(tests/test_cutpoint_engine.py, tests/test_score_batch.py) "
+                "and parallel search is bit-identical to serial "
+                "(tests/test_search_pool.py); per-network rows are "
+                "single-shot and noisy on bursty container CPU -- "
+                "batched_slice (interleaved best-of) is the robust "
+                "batched-vs-per-tuple comparison",
         "compile_workers": args.workers,
         "networks": results,
+        "batched_slice": batched_slice,
+        "smoke_floor": smoke_floor,
         "workers_sweep": sweep,
     }
     Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")

@@ -19,6 +19,7 @@ Deviations from the paper, all conservative:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 from repro.core.grouping import Group, GroupedGraph
 
@@ -64,16 +65,44 @@ class AllocState:
     The allocator walks groups in gid order; everything it carries between
     iterations lives here, so a snapshot taken at any group boundary can be
     cloned and replayed forward (the cut-point engine checkpoints these at
-    monotone-run boundaries to make candidate evaluation incremental)."""
+    monotone-run boundaries to make candidate evaluation incremental, and
+    ``score_batch`` replays each shared cut prefix of a batch exactly once
+    from these checkpoints).
+
+    ``remaining`` and ``location`` are flat per-gid lists rather than
+    dicts: a checkpoint clone is then two C-level list copies, which is
+    what keeps the millions of per-candidate replays of a batched
+    exhaustive search cheap.  Index ``-1`` (Python's last-element alias)
+    is the ``GRAPH_INPUT`` pseudo producer, so ``remaining[src]`` /
+    ``location[src]`` work verbatim for real gids and the graph input.
+
+    ``lean=True`` (the search engines) skips recording the
+    ``alloc_in``/``alloc_out``/``alloc_shortcut`` assignment maps: they
+    never influence metrics, and the winning tuple is re-materialized
+    through the full oracle anyway, so the engine neither writes nor
+    clones them."""
     alloc: Allocation
-    # consumer counts not yet satisfied, per producing gid
-    remaining: dict[int, int]
+    # consumer counts not yet satisfied, per gid ([-1] = graph input)
+    remaining: list[int]
     # location of each produced tensor: buffer id, 'side', or 'dram'
-    location: dict[int, int | str]
+    location: list[int | str]
     # buffer id -> producing gid currently held live
     live_in_buffer: dict[int, int]
+    # skip the assignment-map record keeping (search-engine replays)
+    lean: bool = False
+    # journals of boundary-set additions since the caller last cleared
+    # them: each ``alloc_step`` that grows ``boundary_writes`` /
+    # ``boundary_reads`` / ``spilled`` appends the gid here.  The search
+    # engine drains these per replayed run to update its incremental
+    # cost extraction in O(additions) instead of re-walking the full
+    # (mostly prefix-shared) boundary sets per candidate.
+    j_writes: list[int] = field(default_factory=list)
+    j_reads: list[int] = field(default_factory=list)
+    j_spills: list[int] = field(default_factory=list)
 
     def clone(self) -> "AllocState":
+        # journals intentionally start empty: snapshots are taken at run
+        # boundaries, after the caller drained them
         a = self.alloc
         return AllocState(
             alloc=Allocation(
@@ -83,23 +112,27 @@ class AllocState:
                 side_buff=a.side_buff, spilled=set(a.spilled),
                 boundary_writes=set(a.boundary_writes),
                 boundary_reads=dict(a.boundary_reads)),
-            remaining=dict(self.remaining),
-            location=dict(self.location),
-            live_in_buffer=dict(self.live_in_buffer))
+            remaining=self.remaining.copy(),
+            location=self.location.copy(),
+            live_in_buffer=dict(self.live_in_buffer),
+            lean=self.lean)
 
-
-def init_alloc_state(gg: GroupedGraph) -> AllocState:
+def init_alloc_state(gg: GroupedGraph, lean: bool = False) -> AllocState:
     # Consumer counts at group level (plus 1 virtual consumer for the final
-    # network output so it is always written out).
-    remaining = {g.gid: len(gg.group_consumers(g)) for g in gg.groups}
+    # network output so it is always written out).  The trailing slot is
+    # GRAPH_INPUT (= index -1): location starts at 'dram'; its remaining
+    # count starts at 1, matching the dict-era ``.get(src, 1)`` default.
+    remaining = [len(gg.group_consumers(g)) for g in gg.groups] + [1]
+    location: list[int | str] = ["dram"] * (len(gg.groups) + 1)
     return AllocState(alloc=Allocation(policy={}), remaining=remaining,
-                      location={GRAPH_INPUT: "dram"}, live_in_buffer={})
+                      location=location, live_in_buffer={}, lean=lean)
 
 
-@dataclass(frozen=True)
-class GroupStep:
+class GroupStep(NamedTuple):
     """Static per-group facts consumed by the allocator loop body, resolved
-    once per graph so replays touch no Group/GroupedGraph objects."""
+    once per graph so replays touch no Group/GroupedGraph objects.  A
+    NamedTuple so the (very hot) ``alloc_step`` body unpacks it in one
+    bytecode instead of eight attribute lookups."""
     gid: int
     is_side: bool
     gin: tuple[int, ...]          # producing gids (main path first)
@@ -135,49 +168,59 @@ def alloc_step(state: AllocState, step: GroupStep, mode: str) -> None:
     """Process one group under ``mode``, advancing ``state`` in place.
 
     This is the loop body of Algorithm 1; ``allocate`` applies it to every
-    group and the incremental search engine replays it from a checkpoint."""
+    group and the incremental search engine replays it from a checkpoint
+    (millions of times per exhaustive search -- the body is written with
+    flat list indexing and no per-call allocations on purpose)."""
+    (gid, is_side, gin, src_sizes, sc_src, sc_size,
+     in_size, out_size) = step
     alloc = state.alloc
     remaining = state.remaining
     location = state.location
     live_in_buffer = state.live_in_buffer
-    gid = step.gid
-    gin = step.gin
 
-    def release_if_dead(src: int) -> None:
-        if src == GRAPH_INPUT or remaining.get(src, 0) > 0:
-            return
-        loc = location.get(src)
-        if isinstance(loc, int) and live_in_buffer.get(loc) == src:
-            del live_in_buffer[loc]
+    # "release if dead" -- a consumed tensor whose last consumer this is
+    # frees its buffer -- is inlined at each consumption site below
+    # (type(loc) is int: locations are exactly int | str).
 
-    if step.is_side:
+    if is_side:
         # SE side path: on-chip side space regardless of mode.
-        if step.out_size > alloc.side_buff:
-            alloc.side_buff = step.out_size
+        if out_size > alloc.side_buff:
+            alloc.side_buff = out_size
         location[gid] = "side"
         for src in gin:
-            remaining[src] = remaining.get(src, 1) - 1
-            release_if_dead(src)
+            r = remaining[src] - 1
+            remaining[src] = r
+            if r <= 0 and src != GRAPH_INPUT:
+                loc = location[src]
+                if type(loc) is int and live_in_buffer.get(loc) == src:
+                    del live_in_buffer[loc]
         return
 
     if mode == "row":
         # Feature maps stream through DRAM; no {0,1,2} assignment.
         location[gid] = "dram"
+        bw = alloc.boundary_writes
         for src in gin:
-            remaining[src] = remaining.get(src, 1) - 1
-            # A frame-produced tensor consumed by a row group must have
-            # been written to DRAM at the boundary.
-            if isinstance(location.get(src), int):
-                alloc.boundary_writes.add(src)
-            release_if_dead(src)
+            r = remaining[src] - 1
+            remaining[src] = r
+            loc = location[src]
+            if type(loc) is int:
+                # A frame-produced tensor consumed by a row group must
+                # have been written to DRAM at the boundary.
+                if src not in bw:
+                    bw.add(src)
+                    state.j_writes.append(src)
+                if (r <= 0 and src != GRAPH_INPUT
+                        and live_in_buffer.get(loc) == src):
+                    del live_in_buffer[loc]
         return
 
     # ---------------------------------------------------- frame mode
     in_buffers: set[int] = set()
     read_bytes = 0
-    for src, src_size in zip(gin, step.src_sizes):
-        loc = location.get(src, "dram")
-        if isinstance(loc, int):
+    for src, src_size in zip(gin, src_sizes):
+        loc = location[src]
+        if type(loc) is int:
             in_buffers.add(loc)
         elif loc == "dram":
             # row->frame boundary (or spilled/long-path data): the
@@ -186,62 +229,87 @@ def alloc_step(state: AllocState, step: GroupStep, mode: str) -> None:
     if read_bytes:
         alloc.boundary_reads[gid] = (
             alloc.boundary_reads.get(gid, 0) + read_bytes)
+        state.j_reads.append(gid)
 
     # Record alloc_in / alloc_shortcut from where the operands live.
+    record = not state.lean
     main_src = gin[0] if gin else GRAPH_INPUT
-    main_loc = location.get(main_src, "dram")
+    main_loc = location[main_src]
     buff = alloc.buff
-    if isinstance(main_loc, int):
-        alloc.alloc_in[gid] = main_loc
-        buff[main_loc] = max(buff[main_loc], step.in_size)
+    if type(main_loc) is int:
+        if record:
+            alloc.alloc_in[gid] = main_loc
+        if in_size > buff[main_loc]:
+            buff[main_loc] = in_size
     else:
-        b = next((i for i in range(NUM_BUFFERS)
-                  if i not in live_in_buffer), None)
+        b = None
+        for i in range(NUM_BUFFERS):
+            if i not in live_in_buffer:
+                b = i
+                break
         if b is not None:
-            alloc.alloc_in[gid] = b
-            buff[b] = max(buff[b], step.in_size)
+            if record:
+                alloc.alloc_in[gid] = b
+            if in_size > buff[b]:
+                buff[b] = in_size
             # transient: the fetched input lives only during this group,
             # but the output must not clobber it while it is being read.
             in_buffers.add(b)
-    if step.sc_src is not None:
-        sloc = location.get(step.sc_src, "dram")
-        if isinstance(sloc, int):
-            alloc.alloc_shortcut[gid] = sloc
-            buff[sloc] = max(buff[sloc], step.sc_size)
+    if sc_src is not None:
+        sloc = location[sc_src]
+        if type(sloc) is int:
+            if record:
+                alloc.alloc_shortcut[gid] = sloc
+            if sc_size > buff[sloc]:
+                buff[sloc] = sc_size
 
     # Consume inputs (shortcut included -- group_inputs covers it).
     for src in gin:
-        remaining[src] = remaining.get(src, 1) - 1
+        remaining[src] -= 1
 
     # Concat operands are long-path by definition: producers must have
     # spilled (handled below when the producer ran) or be re-read.
-    if remaining.get(gid, 0) == 0:
+    if remaining[gid] == 0:
         # Final output: written straight to DRAM through the write
         # buffer (eq. 5 final_layers term).
         location[gid] = "dram"
-        alloc.boundary_writes.add(gid)
+        bw = alloc.boundary_writes
+        if gid not in bw:
+            bw.add(gid)
+            state.j_writes.append(gid)
     else:
-        b = next((i for i in range(NUM_BUFFERS)
-                  if i not in live_in_buffer and i not in in_buffers), None)
+        b = None
+        for i in range(NUM_BUFFERS):
+            if i not in live_in_buffer and i not in in_buffers:
+                b = i
+                break
         if b is None:
             # reuse the main input's buffer if the input dies here
-            if (isinstance(main_loc, int)
-                    and remaining.get(main_src, 0) == 0
+            if (type(main_loc) is int
+                    and remaining[main_src] == 0
                     and live_in_buffer.get(main_loc) == main_src):
                 del live_in_buffer[main_loc]
                 b = main_loc
         if b is None:
             # Long-path data (paper §IV-A): spill to DRAM.
             location[gid] = "dram"
-            alloc.spilled.add(gid)
+            sp = alloc.spilled
+            if gid not in sp:
+                sp.add(gid)
+                state.j_spills.append(gid)
         else:
             location[gid] = b
             live_in_buffer[b] = gid
-            alloc.alloc_out[gid] = b
-            buff[b] = max(buff[b], step.out_size)
+            if record:
+                alloc.alloc_out[gid] = b
+            if out_size > buff[b]:
+                buff[b] = out_size
 
     for src in gin:
-        release_if_dead(src)
+        if remaining[src] <= 0 and src != GRAPH_INPUT:
+            loc = location[src]
+            if type(loc) is int and live_in_buffer.get(loc) == src:
+                del live_in_buffer[loc]
 
 
 def allocate(gg: GroupedGraph, policy: Policy) -> Allocation:

@@ -27,8 +27,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.allocator import Allocation, allocate, frame_feasible
-from repro.core.cutpoint import (EXHAUSTIVE_LIMIT, Candidate, SearchResult,
-                                 search, sweep_single_cut)
+from repro.core.cutpoint import (DEFAULT_BATCH_SIZE, EXHAUSTIVE_LIMIT,
+                                 Candidate, SearchResult, search,
+                                 sweep_single_cut)
 from repro.core.dram import DRAMReport, baseline_total, dram_report
 from repro.core.grouping import GroupedGraph, group_nodes
 from repro.core.hw import FPGAConfig, KCU1500
@@ -89,16 +90,20 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
                   objective: str = "latency",
                   policy: dict[int, str] | None = None,
                   exhaustive_limit: int = EXHAUSTIVE_LIMIT,
-                  workers: int | None = 1) -> ExecutionPlan:
+                  workers: int | None = 1,
+                  batch_size: int = DEFAULT_BATCH_SIZE) -> ExecutionPlan:
     """Compile a CNN graph into an :class:`ExecutionPlan`.
 
-    ``objective``, ``exhaustive_limit`` and ``workers`` are forwarded to
-    :func:`repro.core.cutpoint.search` (see its docstring for the full
-    contract); in short, ``objective`` picks what the optimizer minimizes
-    ("latency" / "sram" / "dram"), ``exhaustive_limit`` bounds the cut
-    space enumerated exhaustively before coordinate descent takes over,
-    and ``workers`` > 1 (or ``None`` for all cores) parallelizes the
-    search across processes with a bit-identical result.
+    ``objective``, ``exhaustive_limit``, ``workers`` and ``batch_size``
+    are forwarded to :func:`repro.core.cutpoint.search` (see its docstring
+    for the full contract); in short, ``objective`` picks what the
+    optimizer minimizes ("latency" / "sram" / "dram"),
+    ``exhaustive_limit`` bounds the cut space enumerated exhaustively
+    before coordinate descent takes over, ``workers`` > 1 (or ``None``
+    for all cores) parallelizes the search across processes, and
+    ``batch_size`` sets how many cut tuples each
+    ``CutpointEngine.score_batch`` call scores at once.  Both
+    parallelism knobs leave the result bit-identical.
 
     If ``policy`` is given (gid -> "row"/"frame"), the optimizer is
     skipped and the policy is compiled verbatim -- this is how the all-row
@@ -110,7 +115,8 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
     result: SearchResult | None = None
     if policy is None:
         result = search(gg, hw, objective=objective,
-                        exhaustive_limit=exhaustive_limit, workers=workers)
+                        exhaustive_limit=exhaustive_limit, workers=workers,
+                        batch_size=batch_size)
         cand = result.best
         alloc = cand.alloc
     else:

@@ -38,6 +38,22 @@ bit-for-bit on every metric and is built from three pieces:
   maximizing prefix reuse), and coordinate descent keeps the seed's move
   order (so its trajectory, and therefore its answer, is unchanged) while
   the memo absorbs re-visited tuples across sweeps and restarts.
+* **Batched mask-matrix scoring** -- ``score_batch`` expands B cut tuples
+  into a B x G frame-mask matrix plus a B x G boundary-IO matrix and
+  prices all B candidates in one set of 2-D reductions
+  (``latency_cycles_fast_batch`` / ``dram_fm_fast_batch`` /
+  ``sram_total_fast_batch``), amortizing the per-candidate numpy
+  dispatch that dominates per-tuple evaluation.  The per-candidate
+  inputs come from an *incremental extraction* maintained during the
+  checkpointed replays: the allocator journals boundary-set additions
+  (``AllocState.j_*``) and the engine folds them into running io/DRAM/
+  write-buffer/feasibility accumulators that are checkpointed next to
+  the allocator state -- so a batch in product order replays and
+  re-extracts only what each tuple changes.  ``search``/
+  ``coordinate_descent`` consume this path behind the ``batch_size``
+  knob (results and ``evaluated`` counts are identical for every batch
+  size), and ``kernels/score_batch.py`` stages the same B x G reduction
+  as a Pallas TPU kernel behind ``backend="pallas"``.
 
 Oracle contract: ``CutpointEngine.evaluate(cuts)`` returns the same
 ``latency_cycles`` / ``dram_total`` / ``dram_fm`` / ``sram_total`` /
@@ -63,11 +79,14 @@ import numpy as np
 from repro.core.allocator import (Allocation, Policy, allocate, alloc_step,
                                   frame_feasible, graph_steps,
                                   init_alloc_state, spill_is_long_path)
-from repro.core.dram import dram_fm_fast, dram_report, dram_tables
+from repro.core.dram import (dram_fm_fast, dram_fm_fast_batch, dram_report,
+                             dram_tables)
 from repro.core.grouping import GroupedGraph
 from repro.core.hw import FPGAConfig
-from repro.core.sram import sram_report, sram_tables, sram_total_fast
-from repro.core.timing import latency_cycles_fast, latency_report, latency_tables
+from repro.core.sram import (sram_report, sram_tables, sram_total_fast,
+                             sram_total_fast_batch)
+from repro.core.timing import (latency_cycles_fast, latency_cycles_fast_batch,
+                               latency_report, latency_tables)
 
 
 # ------------------------------------------------------------------- blocks
@@ -200,12 +219,15 @@ def _key(c, objective: str):
 
 
 # ------------------------------------------------------- incremental engine
-@dataclass(frozen=True)
+@dataclass(slots=True)
 class CandidateMetrics:
     """Metrics of one cut tuple, without the policy/alloc payload.
 
     Attribute names mirror :class:`Candidate` so ``_key`` applies to both;
-    ``search`` materializes only the winner into a full Candidate."""
+    ``search`` materializes only the winner into a full Candidate.
+    Treated as immutable by convention (millions are constructed per
+    exhaustive search, so the class stays a plain slots dataclass rather
+    than paying ``frozen=True``'s per-field ``object.__setattr__``)."""
     cuts: tuple[int, ...]
     latency_cycles: float
     dram_total: int
@@ -223,9 +245,14 @@ class CutpointEngine:
 
     def __init__(self, gg: GroupedGraph, hw: FPGAConfig,
                  blocks: list[Block] | None = None,
-                 runs: list[list[int]] | None = None):
+                 runs: list[list[int]] | None = None,
+                 backend: str = "numpy"):
         self.gg = gg
         self.hw = hw
+        # "numpy" (oracle-exact, default) or "pallas" (the staged on-device
+        # batch reduction, float32 -- see kernels/score_batch.py)
+        self.backend = backend
+        self._kt = None               # packed kernel tables, built lazily
         self.blocks = blocks if blocks is not None else split_blocks(gg)
         self.runs = runs if runs is not None else monotone_runs(self.blocks)
         self.dirs = [_run_direction(self.blocks, r) for r in self.runs]
@@ -233,6 +260,8 @@ class CutpointEngine:
         self.run_span = [(self.blocks[r[0]].gids[0],
                           self.blocks[r[-1]].gids[-1] + 1)
                          for r in self.runs]
+        # groups of block b occupy the contiguous gid range _block_span[b]
+        self._block_span = [(b.gids[0], b.gids[-1] + 1) for b in self.blocks]
         self._lt = latency_tables(gg, hw)
         self._dt = dram_tables(gg)
         self._st = sram_tables(gg, hw)
@@ -241,20 +270,155 @@ class CutpointEngine:
         n = len(gg.groups)
         self._frame = np.zeros(n, dtype=bool)
         self._io = np.zeros(n)
+        # incremental cost extraction, updated run-by-run during replays
+        # from the allocator's boundary journals and checkpointed next to
+        # the allocator state: per-group frame-mode IO bytes, dram
+        # boundary/spill byte total, eq. (5) frame write-buffer max, and
+        # spill feasibility
+        self._outsz = self._dt.out_size
+        comp = self._st.compute.tolist()
+        wft = self._st.wr_frame
+        self._wr_cand = [wft[g] if comp[g] else 0 for g in range(n)]
+        self._x_io: list = [0] * n
+        self._x_bfm = 0
+        self._x_wrf = 0
+        self._x_feas = True
+        self._x_cache: list = ([([0] * n, 0, 0, True)]
+                               + [None] * len(self.runs))
         # checkpoint r = allocator state entering run r, valid for the
-        # current materialized prefix cuts[:r]
-        self._ckpts: list = [init_alloc_state(gg)] + [None] * len(self.runs)
+        # current materialized prefix cuts[:r] (lean: replays skip the
+        # metrics-irrelevant assignment maps; the winner is materialized
+        # through the full oracle)
+        self._ckpts: list = ([init_alloc_state(gg, lean=True)]
+                             + [None] * len(self.runs))
+        # reused working state for replays (reset in place per replay;
+        # the checkpoints themselves are real clone() snapshots)
+        self._scratch = init_alloc_state(gg, lean=True)
+        self._bram_memo: dict = {}
         self._cur: tuple[int, ...] | None = None
         self._cache: dict[tuple[int, ...], CandidateMetrics] = {}
         self.evaluations = 0              # cache misses (actual replays)
 
-    def _apply_run_modes(self, ri: int, cut: int) -> None:
-        """Write run ``ri``'s frame/row mask for cut position ``cut``."""
-        run, d = self.runs[ri], self.dirs[ri]
-        for pos, b in enumerate(run):
-            fr = (pos >= cut) if d < 0 else (pos < cut)
-            lo, hi = self.blocks[b].gids[0], self.blocks[b].gids[-1] + 1
-            self._frame[lo:hi] = fr
+    def _replay(self, cuts: tuple[int, ...],
+                rd: int | None = None) -> Allocation:
+        """Materialize the allocation for ``cuts``.
+
+        Finds the longest prefix of runs whose cuts match the engine's
+        current tuple (callers that know it -- ``score_batch`` computes
+        the whole batch's shared prefixes in one vectorized pass -- pass
+        it as ``rd``), resets the reused scratch state to the allocator
+        checkpoint at that run boundary (in-place container reuse: two
+        C-level list copies plus clear+update on the small sets), and
+        replays ``alloc_step`` only over the changed suffix (refreshing
+        the downstream checkpoints, as real clones, along the way).  A
+        batch walked in product order therefore replays each shared cut
+        prefix exactly once.  On return, ``self._frame`` holds the
+        candidate's frame mask; the returned Allocation is the scratch
+        state's and is only valid until the next replay -- callers must
+        extract what they need immediately."""
+        runs = self.runs
+        nr = len(runs)
+        if rd is None:
+            # longest prefix of runs whose cuts are unchanged
+            cur = self._cur
+            if cur is None:
+                rd = 0
+            else:
+                rd = nr
+                for r in range(nr):
+                    if cuts[r] != cur[r]:
+                        rd = r
+                        break
+                if rd >= nr and nr:
+                    # identical tuple re-evaluated without a cache hit
+                    # (e.g. memoize=False): replay the last run
+                    rd = nr - 1
+        # reset the scratch state to checkpoint rd in place, reusing its
+        # containers (lean states: the journals are already drained and
+        # the assignment maps stay empty, so neither needs touching)
+        state = self._scratch
+        ck = self._ckpts[rd]
+        cka = ck.alloc
+        sa = state.alloc
+        sa.buff[:] = cka.buff
+        sa.side_buff = cka.side_buff
+        sp = sa.spilled
+        sp.clear()
+        sp.update(cka.spilled)
+        bws = sa.boundary_writes
+        bws.clear()
+        bws.update(cka.boundary_writes)
+        brd = sa.boundary_reads
+        brd.clear()
+        brd.update(cka.boundary_reads)
+        state.remaining[:] = ck.remaining
+        state.location[:] = ck.location
+        lib = state.live_in_buffer
+        lib.clear()
+        lib.update(ck.live_in_buffer)
+        x_io = self._x_io
+        cio, bfm, wrf, feas = self._x_cache[rd]
+        x_io[:] = cio
+        frame = self._frame
+        steps = self._steps
+        ckpts = self._ckpts
+        xcache = self._x_cache
+        dirs = self.dirs
+        spans = self._block_span
+        alloc = state.alloc
+        jw, jr, jsp = state.j_writes, state.j_reads, state.j_spills
+        outsz = self._outsz
+        wr_cand = self._wr_cand
+        ok = self._spill_ok
+        for r in range(rd, nr):
+            if r > rd:
+                ckpts[r] = state.clone()
+                xcache[r] = (list(x_io), bfm, wrf, feas)
+            cut = cuts[r]
+            d = dirs[r]
+            for pos, b in enumerate(runs[r]):
+                fr = (pos >= cut) if d < 0 else (pos < cut)
+                lo, hi = spans[b]
+                frame[lo:hi] = fr
+                mode = "frame" if fr else "row"
+                for step in steps[lo:hi]:
+                    alloc_step(state, step, mode)
+            # drain this run's boundary-journal additions into the
+            # incremental extraction (O(additions), not O(|sets|))
+            if jr:
+                br = alloc.boundary_reads
+                for gid in jr:
+                    v = br[gid]
+                    x_io[gid] += v
+                    bfm += v
+                del jr[:]
+            if jw:
+                for gid in jw:
+                    v = outsz[gid]
+                    x_io[gid] += v
+                    bfm += v
+                    w = wr_cand[gid]
+                    if w > wrf:
+                        wrf = w
+                del jw[:]
+            if jsp:
+                bw = alloc.boundary_writes
+                for gid in jsp:
+                    if gid not in bw:
+                        v = outsz[gid]
+                        x_io[gid] += v
+                        bfm += v
+                    sv = ok.get(gid)
+                    if sv is None:
+                        sv = ok[gid] = spill_is_long_path(self.gg, gid)
+                    if not sv:
+                        feas = False
+                del jsp[:]
+        self._cur = cuts
+        self._x_bfm = bfm
+        self._x_wrf = wrf
+        self._x_feas = feas
+        return alloc
 
     def evaluate(self, cuts: tuple[int, ...],
                  memoize: bool = True) -> CandidateMetrics:
@@ -267,32 +431,7 @@ class CutpointEngine:
             return hit
         self.evaluations += 1
         gg = self.gg
-        steps = self._steps
-
-        # longest prefix of runs whose cuts are unchanged
-        rd = 0
-        if self._cur is not None:
-            rd = len(self.runs)
-            for r, (a, b) in enumerate(zip(cuts, self._cur)):
-                if a != b:
-                    rd = r
-                    break
-            if rd >= len(self.runs) and self.runs:
-                # identical tuple re-evaluated without a cache hit (e.g.
-                # memoize=False): replay the last run from its checkpoint
-                rd = len(self.runs) - 1
-        state = self._ckpts[rd].clone()
-        for r in range(rd, len(self.runs)):
-            if r > rd:
-                self._ckpts[r] = state.clone()
-            self._apply_run_modes(r, cuts[r])
-            lo, hi = self.run_span[r]
-            frame = self._frame
-            for step in steps[lo:hi]:
-                alloc_step(state, step,
-                           "frame" if frame[step.gid] else "row")
-        self._cur = cuts
-        alloc = state.alloc
+        alloc = self._replay(cuts)
 
         # vectorized cost models over the allocation delta
         frame = self._frame
@@ -329,18 +468,166 @@ class CutpointEngine:
             self._cache[cuts] = m
         return m
 
+    # ------------------------------------------------------ batched scoring
+    def score_batch(self, cuts_batch, memoize: bool = True,
+                    backend: str | None = None) -> list[CandidateMetrics]:
+        """Metrics for a batch of B cut tuples in one set of 2-D reductions.
+
+        The batch is expanded into a B x G frame-mask matrix plus a B x G
+        boundary-I/O matrix (one allocator replay per *distinct* miss, in
+        batch order, so a batch drawn from one sub-space in product order
+        replays each shared cut prefix exactly once through the allocator
+        checkpoints), and ``latency_cycles`` / ``dram_total`` / ``dram_fm``
+        / ``sram_total`` / ``bram18k`` / ``feasible`` for all B candidates
+        fall out of ``latency_cycles_fast_batch`` / ``dram_fm_fast_batch``
+        / ``sram_total_fast_batch``.
+
+        Contract: with the default "numpy" backend, element ``i`` of the
+        returned list is bit-identical to ``evaluate(cuts_batch[i])`` --
+        same IEEE elementwise ops, same left-to-right per-row summation
+        order -- and the memo/``evaluations`` bookkeeping matches a
+        per-tuple loop exactly: cache hits are returned (not recounted),
+        duplicate tuples within a memoized batch are evaluated once, and
+        ``memoize=False`` replays every element (as exhaustive enumeration
+        wants).  ``backend="pallas"`` routes the three reductions through
+        the staged on-device kernel (kernels/score_batch.py, float32 --
+        NOT oracle-exact; for on-device search experiments only); its
+        results are never written into the memo, so ``evaluate``'s
+        bit-exact contract on the same engine instance is preserved
+        (cached exact entries are still served to pallas callers).
+        """
+        if backend is None:
+            backend = self.backend
+        cuts_batch = list(cuts_batch)
+        out: list[CandidateMetrics | None] = [None] * len(cuts_batch)
+        slots: list[tuple[int, int]] = []      # (batch index, miss index)
+        if memoize:
+            miss: list = []              # distinct tuples needing a replay
+            pending: dict[tuple[int, ...], int] = {}
+            for i, cuts in enumerate(cuts_batch):
+                hit = self._cache.get(cuts)
+                if hit is not None:
+                    out[i] = hit
+                    continue
+                j = pending.get(cuts)
+                if j is None:
+                    j = pending[cuts] = len(miss)
+                    miss.append(cuts)
+                slots.append((i, j))
+            if not miss:
+                return out
+        else:
+            # exhaustive enumeration: every element replays, in order
+            miss = cuts_batch
+            if not miss:
+                return out
+
+        # --- vectorized shared-prefix lengths: rd[j] = first run whose cut
+        # differs from miss[j-1] (the engine replays the batch in order, so
+        # the previous miss *is* the engine's current tuple); miss[0]
+        # compares against the engine's real current tuple inside _replay.
+        nr = len(self.runs)
+        if len(miss) > 1 and nr:
+            arr = np.fromiter(itertools.chain.from_iterable(miss),
+                              dtype=np.int64,
+                              count=len(miss) * nr).reshape(len(miss), nr)
+            neq = arr[1:] != arr[:-1]
+            rds = np.where(neq.any(axis=1), neq.argmax(axis=1),
+                           nr - 1).tolist()
+        else:
+            rds = []
+
+        # --- replay each distinct miss; the incremental extraction state
+        # (self._x_*) holds the candidate-dependent scalars afterwards, so
+        # the per-candidate work here is four row/scalar copies
+        n = len(self.gg.groups)
+        frame = np.zeros((len(miss), n), dtype=bool)
+        io_rows: list[list] = []                 # per-candidate io vectors
+        boundary_fm: list[int] = []              # dram boundary/spill bytes
+        cand_terms: list[tuple] = []             # sram per-candidate terms
+        feas_spills: list[bool] = []             # spill feasibility
+        replay = self._replay
+        my_frame = self._frame
+        x_io = self._x_io
+        for j, cuts in enumerate(miss):
+            self.evaluations += 1
+            alloc = replay(cuts, rds[j - 1] if j else None)
+            frame[j] = my_frame
+            io_rows.append(list(x_io))
+            b = alloc.buff
+            cand_terms.append((b[0], b[1], b[2], alloc.side_buff,
+                               self._x_wrf))
+            boundary_fm.append(self._x_bfm)
+            feas_spills.append(self._x_feas)
+        io = np.asarray(io_rows, dtype=np.float64)
+
+        # --- one set of 2-D reductions across the whole batch
+        if backend == "pallas":
+            from repro.kernels.score_batch import pack_tables, score_stats
+            if self._kt is None:
+                self._kt = pack_tables(self._lt, self._dt, self._st)
+            stats = score_stats(self._kt, frame, io, self.hw)
+            lat = stats.latency
+            fm = dram_fm_fast_batch(self._dt, frame, boundary_fm,
+                                    row_terms=stats.row_fm)
+            sram, bram = sram_total_fast_batch(
+                self._st, frame, cand_terms, self.hw, maxima=stats.maxima,
+                bram_memo=self._bram_memo)
+        elif backend == "numpy":
+            lat = latency_cycles_fast_batch(self._lt, frame, io, self.hw)
+            fm = dram_fm_fast_batch(self._dt, frame, boundary_fm)
+            sram, bram = sram_total_fast_batch(
+                self._st, frame, cand_terms, self.hw,
+                bram_memo=self._bram_memo)
+        else:
+            raise ValueError(f"unknown score_batch backend: {backend!r}")
+
+        # --- assemble CandidateMetrics in batch order.  Only oracle-exact
+        # (numpy) results may enter the memo: evaluate() serves from it
+        # under a bit-exactness contract, and float32 kernel results
+        # would silently poison it.
+        lat = lat.tolist()
+        budget = self.hw.sram_budget
+        wb = self._dt.weight_bytes
+        store = memoize and backend == "numpy"
+        cache = self._cache
+        scored: list[CandidateMetrics] = []
+        for j, cuts in enumerate(miss):
+            fm_j = fm[j]
+            sram_j = sram[j]
+            m = CandidateMetrics(
+                cuts=cuts, latency_cycles=lat[j],
+                dram_total=fm_j + wb, dram_fm=fm_j, sram_total=sram_j,
+                bram18k=bram[j],
+                feasible=sram_j <= budget and feas_spills[j])
+            if store:
+                cache[cuts] = m
+            scored.append(m)
+        if not memoize:
+            return scored
+        for i, j in slots:
+            out[i] = scored[j]
+        return out
+
 
 # ------------------------------------------------------------------ search
 # Largest cut-product space searched exhaustively; larger spaces fall back
 # to coordinate descent.  8M covers yolov2's full 7.96M-tuple space: with
-# the incremental engine one tuple costs ~100us, so the worst case is
-# ~2.5 min at 8 workers via search_pool (and ~15 min serial -- pass
-# ``workers`` when compiling detector-scale graphs).
+# the batched scorer one tuple costs ~30us, so the worst case is a few
+# minutes serial and scales further with ``workers`` via search_pool --
+# pass ``workers`` when compiling detector-scale graphs.
 EXHAUSTIVE_LIMIT = 8_000_000
+
+# Cut tuples scored per ``CutpointEngine.score_batch`` call in the search
+# loops.  Large enough to amortize the numpy dispatch overhead of the 2-D
+# reductions across the batch (the win saturates around a few hundred),
+# small enough that the B x G mask/IO matrices stay cache-resident.
+DEFAULT_BATCH_SIZE = 1024
 
 
 def coordinate_descent(engine: "CutpointEngine", start: tuple[int, ...],
-                       objective: str, on_eval=None) -> CandidateMetrics:
+                       objective: str, on_eval=None,
+                       batch_size: int = 1) -> CandidateMetrics:
     """One coordinate descent from ``start`` to its local optimum.
 
     The single definition of the descent trajectory -- move order, strict
@@ -349,6 +636,15 @@ def coordinate_descent(engine: "CutpointEngine", start: tuple[int, ...],
     bit-identity contract requires both to move in lock-step.  ``on_eval``
     (if given) observes every requested cut tuple; search_pool uses it to
     collect the visited set that reconstructs ``evaluated``.
+
+    ``batch_size > 1`` pre-scores each coordinate sweep's trial tuples
+    through ``score_batch`` (memoized) before the decision loop walks
+    them.  The trajectory, the memo contents, the ``evaluations`` count
+    and the ``on_eval`` sequence are unchanged: a sweep over run ``ri``
+    only ever varies coordinate ``ri`` (so the trial set is known up
+    front), and the one tuple the serial loop may skip -- the current
+    point -- is always already memoized, so pre-scoring it costs no
+    evaluation.
     """
     def ev(t: tuple[int, ...]) -> CandidateMetrics:
         if on_eval is not None:
@@ -361,12 +657,22 @@ def coordinate_descent(engine: "CutpointEngine", start: tuple[int, ...],
     while improved:
         improved = False
         for ri, run in enumerate(engine.runs):
+            scored: dict[tuple[int, ...], CandidateMetrics] | None = None
+            if batch_size > 1:
+                trials = [tuple(cuts[:ri] + [v] + cuts[ri + 1:])
+                          for v in range(len(run) + 1)]
+                scored = dict(zip(trials, engine.score_batch(trials)))
             for cand_cut in range(len(run) + 1):
                 if cand_cut == cuts[ri]:
                     continue
                 trial = list(cuts)
                 trial[ri] = cand_cut
-                c = ev(tuple(trial))
+                if scored is not None:
+                    if on_eval is not None:
+                        on_eval(tuple(trial))
+                    c = scored[tuple(trial)]
+                else:
+                    c = ev(tuple(trial))
                 if _key(c, objective) < _key(cur, objective):
                     cur, cuts, improved = c, trial, True
     return cur
@@ -388,7 +694,8 @@ def descent_starts(blocks: list[Block],
 
 def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
            exhaustive_limit: int = EXHAUSTIVE_LIMIT,
-           workers: int | None = 1) -> SearchResult:
+           workers: int | None = 1,
+           batch_size: int = DEFAULT_BATCH_SIZE) -> SearchResult:
     """Find the best cut tuple for ``gg`` on ``hw``.
 
     Knobs
@@ -411,6 +718,12 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
         :class:`repro.core.search_pool.ParallelSearchDriver`; ``None``
         uses ``os.cpu_count()``.  The result is bit-identical to serial
         for every worker count -- parallelism changes wall clock only.
+    batch_size:
+        Cut tuples scored per ``CutpointEngine.score_batch`` call
+        (default ``DEFAULT_BATCH_SIZE``); ``1`` falls back to the
+        per-tuple ``evaluate`` loop.  Like ``workers``, this is purely a
+        wall-clock knob: the returned Candidate and the ``evaluated``
+        count are identical for every batch size.
 
     Returns a :class:`SearchResult` whose ``best`` Candidate is
     materialized through the direct oracle, so it is exactly what the
@@ -420,7 +733,8 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
         from repro.core.search_pool import ParallelSearchDriver
         with ParallelSearchDriver(workers=workers) as driver:
             return driver.search(gg, hw, objective=objective,
-                                 exhaustive_limit=exhaustive_limit)
+                                 exhaustive_limit=exhaustive_limit,
+                                 batch_size=batch_size)
 
     blocks = split_blocks(gg)
     runs = monotone_runs(blocks)
@@ -442,17 +756,28 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
         if space > 1_000_000:
             warnings.warn(
                 f"exhaustive cut search over {space} tuples on a single "
-                f"core (~{space / 10_000 / 60:.0f} min); pass workers=N to "
+                f"core (~{space / 40_000 / 60:.0f} min); pass workers=N to "
                 f"search()/compile_graph() for a bit-identical result in "
                 f"1/N the time, or lower exhaustive_limit to fall back to "
                 f"coordinate descent", RuntimeWarning, stacklevel=2)
-        best: CandidateMetrics | None = None
         # product order: the last run varies fastest, so consecutive tuples
         # share the longest possible checkpoint prefix
-        for cuts in itertools.product(*[range(len(r) + 1) for r in runs]):
-            c = engine.evaluate(cuts, memoize=False)
-            if best is None or _key(c, objective) < _key(best, objective):
-                best = c
+        tuples = itertools.product(*[range(len(r) + 1) for r in runs])
+        best: CandidateMetrics | None = None
+        if batch_size > 1:
+            while True:
+                chunk = list(itertools.islice(tuples, batch_size))
+                if not chunk:
+                    break
+                for c in engine.score_batch(chunk, memoize=False):
+                    if best is None or _key(c, objective) < _key(best,
+                                                                 objective):
+                        best = c
+        else:
+            for cuts in tuples:
+                c = engine.evaluate(cuts, memoize=False)
+                if best is None or _key(c, objective) < _key(best, objective):
+                    best = c
         assert best is not None
         return materialize(best)
 
@@ -463,7 +788,8 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
     # allocation prefix of all earlier runs.
     best = None
     for start in descent_starts(blocks, runs):
-        cur = coordinate_descent(engine, start, objective)
+        cur = coordinate_descent(engine, start, objective,
+                                 batch_size=batch_size)
         if best is None or _key(cur, objective) < _key(best, objective):
             best = cur
     assert best is not None

@@ -118,6 +118,40 @@ def dram_fm_fast(t: DRAMTables, frame: np.ndarray,
     return fm
 
 
+def boundary_fm_bytes(alloc: Allocation, out_size: list[int]) -> int:
+    """The candidate-dependent part of ``dram_fm_fast``: boundary reads +
+    boundary writes + spill write-outs, as one exact Python int.  The
+    engine extracts this per candidate while the replayed allocation is
+    live; ``dram_fm_fast_batch`` adds the vectorized row-mode term."""
+    writes = alloc.boundary_writes
+    fm = 0
+    for rb in alloc.boundary_reads.values():
+        fm += rb
+    for gid in writes:
+        fm += out_size[gid]
+    for gid in alloc.spilled:
+        if gid not in writes:
+            fm += out_size[gid]
+    return fm
+
+
+def dram_fm_fast_batch(t: DRAMTables, frame: np.ndarray,
+                       boundary_fm: list[int],
+                       row_terms=None) -> list[int]:
+    """``dram_fm_fast`` for B candidates: one masked 2-D int64 reduction
+    over the frame-mask matrix for the row-mode term, plus the
+    per-candidate boundary/spill totals (``boundary_fm[i]`` from
+    :func:`boundary_fm_bytes` -- exact ints, so each element is
+    bit-identical to the scalar path).
+
+    ``row_terms`` optionally injects precomputed per-candidate row-mode
+    sums (the Pallas backend computes them on-device); when given they are
+    used verbatim."""
+    if row_terms is None:
+        row_terms = np.where(frame, 0, t.row_fm[None, :]).sum(axis=1)
+    return [int(rt) + b for rt, b in zip(row_terms.tolist(), boundary_fm)]
+
+
 def baseline_total(gg: GroupedGraph) -> int:
     """Paper's baseline (Table V footnote): weights/inputs/outputs accessed
     from DRAM exactly once *per layer* (node granularity -- interior tensors

@@ -17,8 +17,11 @@ to a ``multiprocessing`` worker pool:
   possible allocator-checkpoint prefix.
 * **Per-worker engines** -- each worker process builds its own
   ``CutpointEngine`` for the (graph, hardware) pair, once per search, and
-  keeps it across all tasks of that search.  Engine checkpoints are
-  per-prefix state, so workers share nothing and need no synchronisation.
+  keeps it across all tasks of that search, scoring its sub-space in
+  ``score_batch`` chunks (the ``batch_size`` knob; per-tuple at
+  ``batch_size=1``) so the mask-matrix batching and the process-level
+  parallelism compose.  Engine checkpoints are per-prefix state, so
+  workers share nothing and need no synchronisation.
   The graph is *serialized* once per search; the resulting ``bytes`` ride
   along with every task (a per-task pipe copy of tens of KB -- negligible
   next to the sub-space walk), and workers deserialize it only when their
@@ -104,16 +107,32 @@ def _run_subspace(task) -> tuple["_cp.CandidateMetrics", int]:
     """Evaluate ``prefix x product(suffix_dims)``; return (argmin, #evals).
 
     Ties keep the first optimum in product order, as serial search does.
+    ``batch_size > 1`` walks the sub-space in ``score_batch`` chunks (the
+    production path); the argmin and the evaluation count are identical
+    either way.
     """
-    token, payload, prefix, suffix_dims, objective = task
+    token, payload, prefix, suffix_dims, objective, batch_size = task
     _maybe_fail()
     engine = _worker_engine(token, payload)
     before = engine.evaluations
     best = None
-    for suffix in itertools.product(*[range(d + 1) for d in suffix_dims]):
-        c = engine.evaluate(prefix + suffix, memoize=False)
-        if best is None or _cp._key(c, objective) < _cp._key(best, objective):
-            best = c
+    tuples = (prefix + suffix for suffix in
+              itertools.product(*[range(d + 1) for d in suffix_dims]))
+    if batch_size > 1:
+        while True:
+            chunk = list(itertools.islice(tuples, batch_size))
+            if not chunk:
+                break
+            for c in engine.score_batch(chunk, memoize=False):
+                if best is None or (_cp._key(c, objective)
+                                    < _cp._key(best, objective)):
+                    best = c
+    else:
+        for cuts in tuples:
+            c = engine.evaluate(cuts, memoize=False)
+            if best is None or (_cp._key(c, objective)
+                                < _cp._key(best, objective)):
+                best = c
     return best, engine.evaluations - before
 
 
@@ -124,12 +143,12 @@ def _run_descent(task) -> tuple["_cp.CandidateMetrics", frozenset]:
     the descent trajectory -- so the returned point is the one the serial
     loop reaches from this start, by construction.
     """
-    token, payload, start, objective = task
+    token, payload, start, objective, batch_size = task
     _maybe_fail()
     engine = _worker_engine(token, payload)
     visited: set[tuple[int, ...]] = set()
     cur = _cp.coordinate_descent(engine, start, objective,
-                                 on_eval=visited.add)
+                                 on_eval=visited.add, batch_size=batch_size)
     return cur, frozenset(visited)
 
 
@@ -222,16 +241,21 @@ class ParallelSearchDriver:
     # --------------------------------------------------------------- search
     def search(self, gg, hw, objective: str = "latency",
                exhaustive_limit: int | None = None,
-               min_parallel_space: int = MIN_PARALLEL_SPACE):
+               min_parallel_space: int = MIN_PARALLEL_SPACE,
+               batch_size: int | None = None):
         """Parallel ``cutpoint.search``, bit-identical to the serial result.
 
-        Same knobs as :func:`repro.core.cutpoint.search`; additionally
-        ``min_parallel_space`` sets the space size below which the serial
-        path runs directly (the result is identical either way -- this is
-        purely a fixed-cost cutoff).
+        Same knobs as :func:`repro.core.cutpoint.search` (including
+        ``batch_size``, which each worker forwards to
+        ``CutpointEngine.score_batch`` over its own sub-space);
+        additionally ``min_parallel_space`` sets the space size below
+        which the serial path runs directly (the result is identical
+        either way -- this is purely a fixed-cost cutoff).
         """
         if exhaustive_limit is None:
             exhaustive_limit = _cp.EXHAUSTIVE_LIMIT
+        if batch_size is None:
+            batch_size = _cp.DEFAULT_BATCH_SIZE
         blocks = _cp.split_blocks(gg)
         runs = _cp.monotone_runs(blocks)
         space = 1
@@ -241,7 +265,8 @@ class ParallelSearchDriver:
         if (self.workers <= 1 or not runs
                 or (exhaustive and space < min_parallel_space)):
             return _cp.search(gg, hw, objective=objective,
-                              exhaustive_limit=exhaustive_limit)
+                              exhaustive_limit=exhaustive_limit,
+                              batch_size=batch_size)
 
         self._searches += 1
         token = (os.getpid(), id(self), self._searches)
@@ -250,7 +275,7 @@ class ParallelSearchDriver:
         if exhaustive:
             prefixes, suffix_dims = partition_space(
                 runs, self.workers * TASKS_PER_WORKER)
-            tasks = [(token, payload, p, suffix_dims, objective)
+            tasks = [(token, payload, p, suffix_dims, objective, batch_size)
                      for p in prefixes]
             results = self.map(_run_subspace, tasks)
             evaluated = sum(n for _, n in results)
@@ -259,7 +284,8 @@ class ParallelSearchDriver:
                        key=lambda m: (_cp._key(m, objective), m.cuts))
         else:
             starts = _cp.descent_starts(blocks, runs)
-            tasks = [(token, payload, s, objective) for s in starts]
+            tasks = [(token, payload, s, objective, batch_size)
+                     for s in starts]
             results = self.map(_run_descent, tasks)
             visited: set = set()
             best = None

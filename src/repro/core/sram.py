@@ -147,6 +147,77 @@ def sram_tables(gg: GroupedGraph, hw: FPGAConfig) -> SRAMTables:
                       row_buff=row_buff)
 
 
+def wr_frame_max(t: SRAMTables, alloc: Allocation, frame) -> int:
+    """The candidate-dependent eq. (5) frame-mode term of
+    ``sram_total_fast``: max write-buffer candidate over the allocation's
+    frame-mode boundary writes.  The engine extracts this per candidate
+    while the replayed allocation is live (``frame`` is that candidate's
+    mask row); ``sram_total_fast_batch`` combines it with the vectorized
+    maxima."""
+    cm = t.compute
+    wft = t.wr_frame
+    wr = 0
+    for gid in alloc.boundary_writes:
+        if cm[gid] and frame[gid] and wft[gid] > wr:
+            wr = wft[gid]
+    return wr
+
+
+def sram_total_fast_batch(t: SRAMTables, frame: np.ndarray,
+                          cand_terms: list, hw: FPGAConfig,
+                          maxima=None,
+                          bram_memo: dict | None = None
+                          ) -> tuple[list[int], list[int]]:
+    """``sram_total_fast`` for B candidates: the four policy-dependent
+    maxima of eqs. (1)/(4)/(5) become masked 2-D int64 reductions over the
+    frame-mask matrix; the per-candidate terms arrive as
+    ``cand_terms[i] = (buff0, buff1, buff2, side_buff, wr_frame)`` --
+    the replayed buffer sizes plus :func:`wr_frame_max`.  Integer
+    maxima/sums are exact, so each element is bit-identical to the scalar
+    path.
+
+    ``maxima`` optionally injects precomputed ``(weight_buff, out_frame,
+    out_row, wr_row)`` per-candidate maxima (the Pallas backend computes
+    them on-device).  ``bram_memo`` memoizes eq. (7) over the full
+    buffer-size tuple -- neighbouring candidates in a batch hit the same
+    handful of buffer shapes, so six lru lookups become one dict hit; the
+    dict must be scoped to one (graph tables, hw) pair (the engine owns
+    one per instance)."""
+    if maxima is None:
+        compute = t.compute[None, :]
+        rowm = compute & ~frame
+        frm = compute & frame
+        wbuff = np.where(rowm, t.weight[None, :], 0).max(axis=1)
+        outf = np.where(frm, t.out_frame[None, :], 0).max(axis=1)
+        outr = np.where(rowm, t.out_row[None, :], 0).max(axis=1)
+        wrr = np.where(rowm, t.wr_row[None, :], 0).max(axis=1)
+    else:
+        wbuff, outf, outr, wrr = maxima
+    wbuff = wbuff.tolist()
+    outf = outf.tolist()
+    outr = outr.tolist()
+    wrr = wrr.tolist()
+    totals: list[int] = []
+    brams: list[int] = []
+    row_buff = t.row_buff
+    for i, (b0, b1, b2, side, wr_frame) in enumerate(cand_terms):
+        if wbuff[i] > b1:
+            b1 = wbuff[i]
+        out_buff = max(outf[i], outr[i])
+        write_buff = max(wrr[i], wr_frame)
+        totals.append(row_buff + out_buff + write_buff
+                      + b0 + b1 + b2 + side)
+        key = (out_buff, write_buff, b0, b1, b2, side)
+        bram = None if bram_memo is None else bram_memo.get(key)
+        if bram is None:
+            bram = _bram18k_total(row_buff, out_buff, write_buff,
+                                  [b0, b1, b2], side, hw)
+            if bram_memo is not None:
+                bram_memo[key] = bram
+        brams.append(bram)
+    return totals, brams
+
+
 def sram_total_fast(t: SRAMTables, frame: np.ndarray, alloc: Allocation,
                     hw: FPGAConfig) -> tuple[int, int]:
     """(sram_total, bram18k), bit-identical to ``sram_report``."""

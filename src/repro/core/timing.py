@@ -158,6 +158,26 @@ def latency_cycles_fast(t: LatencyTables, frame: np.ndarray,
     return sum(per.tolist())
 
 
+def latency_cycles_fast_batch(t: LatencyTables, frame: np.ndarray,
+                              io_bytes: np.ndarray,
+                              hw: FPGAConfig) -> np.ndarray:
+    """Total cycles for B candidate policies at once.
+
+    ``frame`` is the B x G frame-mask matrix, ``io_bytes`` the B x G
+    frame-mode boundary-I/O matrix; returns the (B,) cycle totals.  Row b
+    is bit-identical to ``latency_cycles_fast(t, frame[b], io_bytes[b])``:
+    the elementwise ops are the same IEEE operations broadcast over the
+    batch axis, and the per-row total is taken with ``np.cumsum`` along
+    the group axis -- a strictly sequential left-to-right accumulation,
+    i.e. exactly the addition order of the scalar path's Python ``sum``
+    (``np.sum``'s pairwise reduction would NOT reproduce it)."""
+    mem = (t.weight[None, :] + io_bytes) / hw.dram_bytes_per_cycle
+    frame_lat = np.maximum(t.comp[None, :], mem) + hw.group_overhead_cycles
+    per = np.where(t.side[None, :], t.comp[None, :],
+                   np.where(frame, frame_lat, t.row[None, :]))
+    return np.cumsum(per, axis=1)[:, -1]
+
+
 def gops(gg: GroupedGraph, alloc: Allocation, hw: FPGAConfig) -> float:
     """Achieved GOPS (2 ops per MAC) for DSP/MAC-efficiency reporting."""
     total_ops = 2 * gg.graph.total_macs()

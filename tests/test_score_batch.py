@@ -1,0 +1,280 @@
+"""Batched mask-matrix candidate scorer: oracle contract + batch plumbing.
+
+``CutpointEngine.score_batch`` must return metrics bit-identical to the
+direct ``evaluate`` oracle for every cut tuple and every batch shape
+(B=1, ragged tails, batches whose tuples jump across allocator-checkpoint
+prefixes), the search must be byte-identical with batching on or off (and
+serial or parallel), and the staged Pallas kernel must agree with its
+float32 numpy reference in interpret mode."""
+import itertools
+import random
+
+import numpy as np
+import pytest
+
+from repro.cnn import build_cnn
+from repro.core.cutpoint import (CutpointEngine, evaluate, monotone_runs,
+                                 search, split_blocks)
+from repro.core.grouping import group_nodes
+from repro.core.hw import KCU1500
+
+ALL_CNNS = ["vgg16-conv", "yolov2", "yolov3", "resnet50", "resnet152",
+            "efficientnet-b1", "retinanet", "mobilenet-v3"]
+SMALL_EXHAUSTIVE = {"vgg16-conv": 224, "resnet50": 224}
+
+METRICS = ["latency_cycles", "dram_total", "dram_fm", "sram_total",
+           "bram18k", "feasible"]
+
+_GG_CACHE: dict = {}
+
+
+def _grouped(name):
+    got = _GG_CACHE.get(name)
+    if got is None:
+        gg = group_nodes(build_cnn(name))
+        blocks = split_blocks(gg)
+        runs = monotone_runs(blocks)
+        got = _GG_CACHE[name] = (gg, blocks, runs)
+    return got
+
+
+def _assert_same(a, b, ctx):
+    for f in METRICS:
+        assert getattr(a, f) == getattr(b, f), (
+            f"{ctx}: {f} {getattr(a, f)!r} != {getattr(b, f)!r} "
+            f"(cuts={a.cuts})")
+
+
+def _mixed_tuples(runs, n_prefix=40, n_random=40, seed=11):
+    """Product-order head (max prefix reuse) + seeded random tuples
+    (worst-case checkpoint restarts across arbitrary prefixes)."""
+    dims = [range(len(r) + 1) for r in runs]
+    tuples = list(itertools.islice(itertools.product(*dims), n_prefix))
+    rng = random.Random(seed)
+    tuples += [tuple(rng.randint(0, len(r)) for r in runs)
+               for _ in range(n_random)]
+    tuples.append(tuple(0 for _ in runs))
+    tuples.append(tuple(len(r) for r in runs))
+    return tuples
+
+
+# ------------------------------------------------------------ oracle contract
+@pytest.mark.parametrize("name", ALL_CNNS)
+def test_score_batch_matches_oracle(name):
+    """Random + product-order batches vs the direct oracle, whole zoo."""
+    gg, blocks, runs = _grouped(name)
+    engine = CutpointEngine(gg, KCU1500, blocks, runs)
+    tuples = _mixed_tuples(runs)
+    batched = engine.score_batch(tuples, memoize=False)
+    for cuts, fast in zip(tuples, batched):
+        oracle = evaluate(gg, blocks, runs, cuts, KCU1500)
+        _assert_same(oracle, fast, name)
+
+
+@pytest.mark.parametrize("name,size", sorted(SMALL_EXHAUSTIVE.items()))
+def test_score_batch_exhaustive_on_small_nets(name, size):
+    """Every tuple of the full cut space, scored in batches, must equal the
+    per-tuple engine (itself oracle-exact) bit for bit."""
+    gg, blocks, runs = _grouped(name)
+    scalar = CutpointEngine(gg, KCU1500, blocks, runs)
+    batched = CutpointEngine(gg, KCU1500, blocks, runs)
+    tuples = list(itertools.product(*[range(len(r) + 1) for r in runs]))
+    got = []
+    for i in range(0, len(tuples), 1024):
+        got.extend(batched.score_batch(tuples[i:i + 1024], memoize=False))
+    assert len(got) == len(tuples)
+    assert batched.evaluations == len(tuples)
+    for cuts, m in zip(tuples, got):
+        _assert_same(scalar.evaluate(cuts, memoize=False), m, name)
+
+
+# ----------------------------------------------------------- batch boundaries
+def test_batch_size_one_and_ragged_tail():
+    gg, blocks, runs = _grouped("resnet50")
+    engine = CutpointEngine(gg, KCU1500, blocks, runs)
+    tuples = _mixed_tuples(runs, n_prefix=10, n_random=7)  # 19 tuples
+    # B=1 batches
+    singles = [engine.score_batch([c], memoize=False)[0] for c in tuples]
+    # ragged: 19 = 8 + 8 + 3
+    ragged_engine = CutpointEngine(gg, KCU1500, blocks, runs)
+    ragged = []
+    for i in range(0, len(tuples), 8):
+        ragged.extend(ragged_engine.score_batch(tuples[i:i + 8],
+                                                memoize=False))
+    for cuts, a, b in zip(tuples, singles, ragged):
+        _assert_same(a, b, "B=1 vs ragged")
+        _assert_same(evaluate(gg, blocks, runs, cuts, KCU1500), a, "oracle")
+
+
+def test_cross_prefix_batches():
+    """A batch alternating between far-apart corners of the cut space
+    forces a checkpoint restart on every element."""
+    gg, blocks, runs = _grouped("yolov2")
+    lo = tuple(0 for _ in runs)
+    hi = tuple(len(r) for r in runs)
+    rng = random.Random(5)
+    mids = [tuple(rng.randint(0, len(r)) for r in runs) for _ in range(8)]
+    batch = []
+    for m in mids:
+        batch += [lo, m, hi]
+    engine = CutpointEngine(gg, KCU1500, blocks, runs)
+    for cuts, m in zip(batch, engine.score_batch(batch, memoize=False)):
+        _assert_same(evaluate(gg, blocks, runs, cuts, KCU1500), m,
+                     "cross-prefix")
+
+
+def test_empty_batch():
+    gg, blocks, runs = _grouped("resnet50")
+    engine = CutpointEngine(gg, KCU1500, blocks, runs)
+    assert engine.score_batch([], memoize=False) == []
+    assert engine.score_batch([], memoize=True) == []
+    assert engine.evaluations == 0
+
+
+def test_incremental_extraction_matches_set_walk():
+    """The engine's journal-fed accumulators (``_x_bfm`` / ``_x_wrf``)
+    must equal a from-scratch walk of the replayed allocation's boundary
+    sets (``boundary_fm_bytes`` / ``wr_frame_max``) for every tuple --
+    including random ones that force deep checkpoint restarts."""
+    from repro.core.dram import boundary_fm_bytes
+    from repro.core.sram import wr_frame_max
+    for name in ["yolov2", "retinanet"]:
+        gg, blocks, runs = _grouped(name)
+        engine = CutpointEngine(gg, KCU1500, blocks, runs)
+        for cuts in _mixed_tuples(runs, n_prefix=20, n_random=20, seed=9):
+            alloc = engine._replay(cuts)
+            assert engine._x_bfm == boundary_fm_bytes(
+                alloc, engine._dt.out_size), (name, cuts)
+            assert engine._x_wrf == wr_frame_max(
+                engine._st, alloc, engine._frame), (name, cuts)
+
+
+# ------------------------------------------------------------ memo semantics
+def test_memoized_batch_matches_evaluate_bookkeeping():
+    """Cache hits are returned (not recounted), in-batch duplicates are
+    evaluated once, and score_batch/evaluate share one memo -- exactly the
+    bookkeeping a per-tuple evaluate loop would produce."""
+    gg, blocks, runs = _grouped("resnet50")
+    engine = CutpointEngine(gg, KCU1500, blocks, runs)
+    t0 = tuple(0 for _ in runs)
+    t1 = tuple(min(1, len(r)) for r in runs)
+    t2 = tuple(len(r) for r in runs)
+    warm = engine.evaluate(t0)
+    n0 = engine.evaluations
+    got = engine.score_batch([t0, t1, t1, t2])
+    assert got[0] is warm                      # cache hit returned as-is
+    assert got[1] is got[2]                    # duplicate scored once
+    assert engine.evaluations == n0 + 2        # only t1 and t2 replayed
+    assert engine.evaluate(t1) is got[1]       # memo shared with evaluate
+    assert engine.evaluations == n0 + 2
+
+
+# ------------------------------------------------- search-level bit-identity
+def test_search_batched_equals_per_tuple_exhaustive():
+    gg, _, _ = _grouped("resnet50")
+    a = search(gg, KCU1500, batch_size=1)
+    b = search(gg, KCU1500, batch_size=1024)
+    assert a.best.cuts == b.best.cuts
+    assert a.evaluated == b.evaluated
+    _assert_same(a.best, b.best, "search exhaustive")
+    assert a.best.policy == b.best.policy
+    assert a.best.alloc.buff == b.best.alloc.buff
+
+
+@pytest.mark.parametrize("name", ["efficientnet-b1", "mobilenet-v3"])
+def test_search_batched_equals_per_tuple_descent(name):
+    """Coordinate-descent fallback: identical trajectory, memo and
+    ``evaluated`` count with sweep pre-scoring on."""
+    gg, _, _ = _grouped(name)
+    a = search(gg, KCU1500, batch_size=1)
+    b = search(gg, KCU1500, batch_size=512)
+    assert a.best.cuts == b.best.cuts
+    assert a.evaluated == b.evaluated
+    _assert_same(a.best, b.best, name)
+
+
+def test_search_parallel_batched_bit_identity():
+    """workers=2 x batch_size>1 together must still reproduce the serial
+    per-tuple SearchResult exactly (exhaustive path, space > the pool's
+    min_parallel_space so it is actually partitioned)."""
+    gg, _, _ = _grouped("resnet50")
+    serial = search(gg, KCU1500, batch_size=1)
+    parallel = search(gg, KCU1500, workers=2, batch_size=1024)
+    assert serial.best.cuts == parallel.best.cuts
+    assert serial.evaluated == parallel.evaluated
+    _assert_same(serial.best, parallel.best, "parallel+batched")
+
+
+def test_search_parallel_batched_descent_bit_identity():
+    gg, _, _ = _grouped("efficientnet-b1")
+    serial = search(gg, KCU1500, batch_size=1, exhaustive_limit=1000)
+    parallel = search(gg, KCU1500, workers=2, batch_size=512,
+                      exhaustive_limit=1000)
+    assert serial.best.cuts == parallel.best.cuts
+    assert serial.evaluated == parallel.evaluated
+    _assert_same(serial.best, parallel.best, "parallel descent+batched")
+
+
+# ------------------------------------------------------------- pallas kernel
+def _batch_inputs(name, n_tuples=32):
+    gg, blocks, runs = _grouped(name)
+    engine = CutpointEngine(gg, KCU1500, blocks, runs)
+    tuples = _mixed_tuples(runs, n_prefix=n_tuples // 2,
+                           n_random=n_tuples // 2, seed=3)
+    n = len(gg.groups)
+    frame = np.zeros((len(tuples), n), dtype=bool)
+    io = np.zeros((len(tuples), n))
+    for j, cuts in enumerate(tuples):
+        engine._replay(cuts)
+        frame[j] = engine._frame
+        io[j] = np.asarray(engine._x_io, dtype=np.float64)
+    return engine, tuples, frame, io
+
+
+def test_pallas_kernel_matches_numpy_reference():
+    jax = pytest.importorskip("jax")                       # noqa: F841
+    from repro.kernels.score_batch import (pack_tables, score_batch_pallas,
+                                           score_batch_ref)
+    for name in ["resnet50", "yolov2"]:
+        engine, _, frame, io = _batch_inputs(name)
+        tables = pack_tables(engine._lt, engine._dt, engine._st)
+        bpc = KCU1500.dram_bytes_per_cycle
+        ovh = KCU1500.group_overhead_cycles
+        ref = score_batch_ref(tables, frame, io, bpc, ovh)
+        ker = score_batch_pallas(tables, frame, io, bpc, ovh,
+                                 interpret=True)
+        assert ker.shape == ref.shape
+        assert np.allclose(ker, ref, rtol=1e-5, atol=1e-2), (
+            name, np.max(np.abs(ker - ref)))
+
+
+def test_pallas_backend_tracks_numpy_backend():
+    """backend='pallas' is float32-staged, not oracle-exact: its metrics
+    must agree with the numpy backend to float32 relative precision and
+    its bookkeeping (evaluations, memo) must be unchanged."""
+    pytest.importorskip("jax")
+    gg, blocks, runs = _grouped("resnet50")
+    tuples = _mixed_tuples(runs, n_prefix=16, n_random=16)
+    a = CutpointEngine(gg, KCU1500, blocks, runs).score_batch(
+        tuples, memoize=False)
+    pe = CutpointEngine(gg, KCU1500, blocks, runs, backend="pallas")
+    b = pe.score_batch(tuples, memoize=False)
+    assert pe.evaluations == len(tuples)
+    for x, y in zip(a, b):
+        assert x.cuts == y.cuts
+        assert abs(x.latency_cycles - y.latency_cycles) \
+            <= 1e-4 * max(1.0, x.latency_cycles)
+        assert abs(x.dram_fm - y.dram_fm) <= 1e-4 * max(1, x.dram_fm)
+
+
+def test_pallas_results_never_poison_the_memo():
+    """A memoized pallas batch must not plant float32 results in the
+    shared memo: a later evaluate() on the same engine still returns the
+    bit-exact oracle metrics."""
+    pytest.importorskip("jax")
+    gg, blocks, runs = _grouped("resnet50")
+    cuts = tuple(0 for _ in runs)
+    engine = CutpointEngine(gg, KCU1500, blocks, runs, backend="pallas")
+    engine.score_batch([cuts])            # memoize=True, pallas backend
+    _assert_same(evaluate(gg, blocks, runs, cuts, KCU1500),
+                 engine.evaluate(cuts), "post-pallas evaluate")
