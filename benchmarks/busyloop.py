@@ -1,0 +1,54 @@
+"""Shared busy-loop machine calibration for benchmark regression gates.
+
+Both CI benchmark gates (compile_throughput.py --smoke and
+residency_throughput.py --smoke) compare a freshly measured rate against
+a floor committed in the BENCH_*.json files.  Raw rates would gate on
+machine speed, not code efficiency, so each committed floor is stored
+next to the committing machine's busy-loop rate and the gate normalizes
+by the ratio of the gating machine's rate to it -- measured right next
+to the benchmark, with best-of-two runs because containers deliver
+bursty CPU.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _burn(n: int) -> int:
+    x = 0
+    for i in range(n):
+        x += i * i
+    return x
+
+
+def measure_busyloop_rate(n: int = 10_000_000) -> float:
+    """Single-core pure-Python ops/sec of ``_burn`` (best of two)."""
+    best = 0.0
+    for _ in range(2):
+        t0 = time.perf_counter()
+        _burn(n)
+        best = max(best, n / (time.perf_counter() - t0))
+    return best
+
+
+def measure_parallel_capacity(workers: int, n: int = 20_000_000) -> float:
+    """Effective parallel speedup of this machine for pure-Python work.
+
+    Containers and hypervisors routinely advertise more CPUs than they
+    deliver; this runs ``workers`` identical busy loops concurrently and
+    reports (total work)/(wall x serial rate).  Parallel-benchmark
+    speedups should be read against this ceiling, not the advertised
+    ``cpu_count``.
+    """
+    import multiprocessing as mp
+    t0 = time.perf_counter()
+    _burn(n)
+    serial = time.perf_counter() - t0
+    procs = [mp.Process(target=_burn, args=(n,)) for _ in range(workers)]
+    t0 = time.perf_counter()
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+    wall = time.perf_counter() - t0
+    return workers * serial / wall

@@ -13,8 +13,11 @@ For every CNN-zoo network, measures
 plus a **batched slice** (the headline): a fixed slice of yolov2's
 partitioned cut space scored per-tuple and batched, interleaved
 best-of-N per mode so this container's CPU-burst variance mostly cancels,
-with the PR 3 per-tuple engine rate as the committed reference point; and
-a **workers sweep**: the same kind of slice pushed through the search
+with the PR 3 per-tuple engine rate as the committed reference point; an
+**allocator-replay comparison** (``alloc_replay``): the same slice scored
+under the journal Python replay vs the tensorized device replay of
+kernels/alloc_scan.py (numpy reference / jax scan / Pallas interpret);
+and a **workers sweep**: the same kind of slice pushed through the search
 pool at 1/2/4/8 workers.  Everything lands in ``BENCH_compile.json``.
 The numbers are only meaningful because the engine and the batched scorer
 are oracle-exact -- equivalence is enforced by
@@ -56,6 +59,12 @@ from repro.core.hw import KCU1500                                # noqa: E402
 from repro.core.search_pool import (ParallelSearchDriver,        # noqa: E402
                                     _run_subspace, partition_space)
 
+try:                                                             # noqa: E402
+    from busyloop import measure_busyloop_rate, measure_parallel_capacity
+except ImportError:                                  # pragma: no cover
+    from benchmarks.busyloop import (measure_busyloop_rate,
+                                     measure_parallel_capacity)
+
 # PR 3's committed per-tuple engine rate on the yolov2 slice (this
 # machine, BENCH_compile.json workers_sweep["1"] before the batched
 # scorer landed) -- the reference the batched slice's speedup is gated
@@ -73,52 +82,6 @@ METRICS = ["latency_cycles", "dram_total", "dram_fm", "sram_total",
 
 def _product_tuples(runs):
     return itertools.product(*[range(len(r) + 1) for r in runs])
-
-
-def _burn(n: int) -> int:
-    x = 0
-    for i in range(n):
-        x += i * i
-    return x
-
-
-def measure_busyloop_rate(n: int = 10_000_000) -> float:
-    """Single-core busy-loop calibration: pure-Python ops/sec of ``_burn``.
-
-    The smoke regression gate normalizes the committed evals/sec floor by
-    the ratio of this rate (measured on the gating machine, right next to
-    the measurement) to the rate committed alongside the floor, so the
-    gate tracks scorer regressions rather than machine-speed differences.
-    Best of two runs -- containers deliver bursty CPU."""
-    best = 0.0
-    for _ in range(2):
-        t0 = time.perf_counter()
-        _burn(n)
-        best = max(best, n / (time.perf_counter() - t0))
-    return best
-
-
-def measure_parallel_capacity(workers: int, n: int = 20_000_000) -> float:
-    """Effective parallel speedup of this machine for pure-Python work.
-
-    Containers and hypervisors routinely advertise more CPUs than they
-    deliver; this runs ``workers`` identical busy loops concurrently and
-    reports (total work)/(wall x serial rate).  The workers-sweep speedup
-    below should be read against this ceiling, not against the advertised
-    ``cpu_count``.
-    """
-    import multiprocessing as mp
-    t0 = time.perf_counter()
-    _burn(n)
-    serial = time.perf_counter() - t0
-    procs = [mp.Process(target=_burn, args=(n,)) for _ in range(workers)]
-    t0 = time.perf_counter()
-    for p in procs:
-        p.start()
-    for p in procs:
-        p.join()
-    wall = time.perf_counter() - t0
-    return workers * serial / wall
 
 
 def bench_workers_sweep(name: str, size: int, worker_counts: list[int],
@@ -152,7 +115,7 @@ def bench_workers_sweep(name: str, size: int, worker_counts: list[int],
     for w in worker_counts:
         token = ("sweep", name, size, w)
         tasks = [(token, payload, p, suffix_dims, "latency",
-                  DEFAULT_BATCH_SIZE) for p in prefixes]
+                  DEFAULT_BATCH_SIZE, "journal") for p in prefixes]
         t0 = time.perf_counter()
         if w == 1:
             results = [_run_subspace(t) for t in tasks]
@@ -219,8 +182,8 @@ def bench_batched_slice(name: str = "yolov2", size: int = 416,
     for rep in range(reps):
         for mode, bs in modes:
             token = ("slice", name, size, mode, rep)
-            tasks = [(token, payload, p, suffix_dims, "latency", bs)
-                     for p in prefixes]
+            tasks = [(token, payload, p, suffix_dims, "latency", bs,
+                      "journal") for p in prefixes]
             t0 = time.perf_counter()
             results = [_run_subspace(t) for t in tasks]
             wall = time.perf_counter() - t0
@@ -251,6 +214,80 @@ def bench_batched_slice(name: str = "yolov2", size: int = 416,
         "speedup_vs_pr3_engine": round(vs_pr3, 2),
         "note": "interleaved best-of per mode on one fixed exhaustive "
                 "slice; identical argmin asserted across modes",
+    }
+
+
+def bench_alloc_replay(name: str = "yolov2", size: int = 416,
+                       n_tasks: int = 8, reps: int = 2,
+                       pallas_batches: int = 4) -> dict:
+    """Allocator-replay comparison on the fixed yolov2 slice: the
+    journal-based Python replay vs the tensorized device replay
+    (kernels/alloc_scan.py) under its numpy-reference, jax.lax.scan and
+    Pallas-interpret backends.
+
+    Each mode scores the *same* product-order slice through
+    ``CutpointEngine.score_batch`` in production-size batches and must
+    produce the same argmin (they are bit-identical by contract --
+    tests/test_alloc_scan.py; the assertion keeps the benchmark honest).
+    Interleaved best-of per mode, like the batched slice.  The Pallas
+    interpret mode runs the kernel body un-compiled, so it is measured on
+    a few batches and reported for completeness -- on a real TPU the same
+    kernel compiles; off-TPU its rate is a correctness artifact, not a
+    speed claim."""
+    gg = group_nodes(build_cnn(name, size))
+    blocks = split_blocks(gg)
+    runs = monotone_runs(blocks)
+    prefixes, suffix_dims = partition_space(runs, target_tasks=64)
+    prefixes = prefixes[:n_tasks]
+    tuples = [p + s for p in prefixes
+              for s in itertools.product(*[range(d + 1)
+                                           for d in suffix_dims])]
+    chunks = [tuples[i:i + DEFAULT_BATCH_SIZE]
+              for i in range(0, len(tuples), DEFAULT_BATCH_SIZE)]
+
+    modes = [("python_journal", "journal", None),
+             ("scan_reference", "device", "reference"),
+             ("jax_scan", "device", "scan"),
+             ("pallas_interpret", "device", "pallas")]
+    best_eps = {m: 0.0 for m, _, _ in modes}
+    argmins = {}
+    for rep in range(reps):
+        for mode, replay, alloc_backend in modes:
+            engine = CutpointEngine(gg, KCU1500, blocks, runs,
+                                    replay=replay,
+                                    alloc_backend=alloc_backend)
+            use = chunks if mode != "pallas_interpret" \
+                else chunks[:pallas_batches]
+            best = None
+            t0 = time.perf_counter()
+            for chunk in use:
+                for c in engine.score_batch(chunk, memoize=False):
+                    if best is None or (_key(c, "latency")
+                                        < _key(best, "latency")):
+                        best = c
+            wall = time.perf_counter() - t0
+            assert engine.evaluations == sum(len(c) for c in use)
+            eps = engine.evaluations / wall
+            best_eps[mode] = max(best_eps[mode], eps)
+            if mode != "pallas_interpret":          # partial slice differs
+                argmins.setdefault(mode, best.cuts)
+            print(f"alloc replay {name} rep{rep} {mode}: "
+                  f"{wall:.1f}s {eps:.0f} evals/s")
+    assert len(set(argmins.values())) == 1, \
+        "journal/device argmin must agree"
+    return {
+        "network": f"{name}@{size}",
+        "tuples": len(tuples),
+        "batch_size": DEFAULT_BATCH_SIZE,
+        "reps": reps,
+        "evals_per_sec": {m: round(r, 1) for m, r in best_eps.items()},
+        "device_vs_journal": round(
+            best_eps["scan_reference"] / best_eps["python_journal"], 2),
+        "note": "same fixed yolov2 slice as batched_slice, scored via "
+                "score_batch under each allocator-replay mode; argmin "
+                "asserted identical (bit-identity is the tested "
+                "contract); pallas_interpret is un-compiled kernel "
+                "emulation measured on a few batches",
     }
 
 
@@ -304,14 +341,20 @@ def bench_network(name: str, size: int, budget_s: float,
     if check_equiv:
         fresh = CutpointEngine(gg, KCU1500, blocks, runs)
         fresh_b = CutpointEngine(gg, KCU1500, blocks, runs)
+        fresh_d = CutpointEngine(gg, KCU1500, blocks, runs,
+                                 replay="device")
         sample = list(itertools.islice(_product_tuples(runs), 10))
-        for cuts, m_b in zip(sample, fresh_b.score_batch(sample,
-                                                         memoize=False)):
+        for cuts, m_b, m_d in zip(sample,
+                                  fresh_b.score_batch(sample,
+                                                      memoize=False),
+                                  fresh_d.score_batch(sample,
+                                                      memoize=False)):
             o = evaluate(gg, blocks, runs, cuts, KCU1500)
             m = fresh.evaluate(cuts)
             for f in METRICS:
                 assert getattr(o, f) == getattr(m, f), (name, cuts, f)
                 assert getattr(o, f) == getattr(m_b, f), (name, cuts, f)
+                assert getattr(o, f) == getattr(m_d, f), (name, cuts, f)
 
     # end-to-end compile (grouping + search + instruction generation)
     graph = build_cnn(name, size)
@@ -341,7 +384,10 @@ def smoke_batched_gate(results: dict, committed_path: Path) -> dict:
     must stay within ``max_regression`` of the committed floor, after
     normalizing by the busy-loop calibration ratio (so the gate compares
     scorer efficiency, not machine speed).  Returns the gate record that
-    lands in BENCH_smoke.json."""
+    lands in BENCH_smoke.json; a failure is reported via
+    ``record["passed"]``/``record["fail_msg"]`` and raised by the caller
+    only *after* the artifact is written (the diagnostic JSON must
+    survive the exact failure it exists to explain)."""
     rate = measure_busyloop_rate()
     floor = None
     if committed_path.exists():
@@ -355,6 +401,12 @@ def smoke_batched_gate(results: dict, committed_path: Path) -> dict:
         print("smoke gate: no committed smoke_floor -- measuring only")
         return record
     net = floor["network"]
+    if net not in results:
+        print(f"smoke gate: committed floor network {net!r} not among the "
+              f"smoke networks -- measuring only (keep SMOKE_ZOO and the "
+              f"committed floor in sync)")
+        record["floor_network_missing"] = net
+        return record
     measured = results[net]["batched_evals_per_sec"]
     speed = rate / floor["busyloop_ops_per_sec"]
     need = floor["batched_evals_per_sec"] * speed * (1 - floor["max_regression"])
@@ -365,13 +417,15 @@ def smoke_batched_gate(results: dict, committed_path: Path) -> dict:
         "required_evals_per_sec": round(need, 1),
         "passed": measured >= need,
     })
-    assert measured >= need, (
-        f"batched-scorer regression gate: {net} measured {measured:.0f} "
-        f"evals/s < required {need:.0f} (committed floor "
-        f"{floor['batched_evals_per_sec']:.0f} x machine speed "
-        f"{speed:.2f} x {1 - floor['max_regression']:.2f})")
-    print(f"batched gate OK: {net} {measured:.0f} evals/s >= "
-          f"{need:.0f} required (machine speed {speed:.2f}x vs floor)")
+    if measured >= need:
+        print(f"batched gate OK: {net} {measured:.0f} evals/s >= "
+              f"{need:.0f} required (machine speed {speed:.2f}x vs floor)")
+    else:
+        record["fail_msg"] = (
+            f"batched-scorer regression gate: {net} measured "
+            f"{measured:.0f} evals/s < required {need:.0f} (committed "
+            f"floor {floor['batched_evals_per_sec']:.0f} x machine speed "
+            f"{speed:.2f} x {1 - floor['max_regression']:.2f})")
     return record
 
 
@@ -402,6 +456,9 @@ def main() -> None:
                     help="re-measure only the workers sweep and splice it "
                          "into the existing output JSON (the per-network "
                          "table takes ~20 min; the sweep ~5)")
+    ap.add_argument("--alloc-only", action="store_true",
+                    help="re-measure only the allocator-replay comparison "
+                         "and splice it into the existing output JSON")
     ap.add_argument("-o", "--output", default="BENCH_compile.json")
     args = ap.parse_args()
 
@@ -411,6 +468,13 @@ def main() -> None:
             "yolov2", 416, worker_counts=[1, 2, 4, 8])
         Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"updated workers_sweep in {args.output}")
+        return
+
+    if args.alloc_only:
+        payload = json.loads(Path(args.output).read_text())
+        payload["alloc_replay"] = bench_alloc_replay("yolov2", 416)
+        Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"updated alloc_replay in {args.output}")
         return
 
     zoo = SMOKE_ZOO if args.smoke else ZOO
@@ -435,10 +499,13 @@ def main() -> None:
         smoke_out.write_text(json.dumps(
             {"networks": results, "batched_gate": gate}, indent=2) + "\n")
         print(f"wrote {smoke_out} (CI artifact; committed JSON untouched)")
+        # raised only now, after the diagnostic artifact is on disk
+        assert gate.get("passed", True), gate["fail_msg"]
         return
 
     sweep = bench_workers_sweep("yolov2", 416, worker_counts=[1, 2, 4, 8])
     batched_slice = bench_batched_slice("yolov2", 416)
+    alloc_replay = bench_alloc_replay("yolov2", 416)
 
     # the floor the CI smoke gate regresses against: the batched scorer's
     # rate on SMOKE_ZOO[1] (resnet50 -- the larger smoke network, whose
@@ -465,6 +532,7 @@ def main() -> None:
         "compile_workers": args.workers,
         "networks": results,
         "batched_slice": batched_slice,
+        "alloc_replay": alloc_replay,
         "smoke_floor": smoke_floor,
         "workers_sweep": sweep,
     }

@@ -16,9 +16,16 @@ tests/test_residency_engine.py and spot-checked here.
 Usage:
     PYTHONPATH=src python benchmarks/residency_throughput.py [--smoke] [-o F]
 
-``--smoke`` runs small stacks with short budgets and asserts engine/direct
-agreement plus a conservative speedup gate instead of writing the JSON
-(CI regression gate, alongside compile_throughput.py --smoke).
+``--smoke`` (the CI regression gate, alongside compile_throughput.py
+--smoke) runs small stacks with short budgets, asserts engine/direct
+agreement and a conservative relative-speedup gate, and additionally
+compares the engine's absolute cuts/sec on the floor stack against the
+committed floor in BENCH_residency.json -- normalized by the shared
+busy-loop calibration (benchmarks/busyloop.py) so a slow CI machine
+doesn't trip it -- failing on >30% regression.  Its measurements land in
+BENCH_residency_smoke.json (uploaded as a CI artifact; the committed
+JSON is untouched).  ``--floor-only`` re-measures just the committed
+floor and splices it into the JSON.
 """
 from __future__ import annotations
 
@@ -36,7 +43,17 @@ from repro.core.hw import V5E                                    # noqa: E402
 from repro.core.residency import (LMBlockSpec, ResidencyEngine,  # noqa: E402
                                   _evaluate, _fits, plan_cutpoint, plan_dp)
 
+try:                                                             # noqa: E402
+    from busyloop import measure_busyloop_rate
+except ImportError:                                  # pragma: no cover
+    from benchmarks.busyloop import measure_busyloop_rate
+
 MB = 1 << 20
+
+# The stack whose absolute engine cuts/sec carries the committed smoke
+# floor (the largest smoke stack: least noisy measurement window).
+FLOOR_STACK = ("hetero-vision-cross", 512)
+MAX_REGRESSION = 0.30
 
 STACKS = [("uniform-lm", 1000), ("moe-interleave", 2000),
           ("hetero-vision-cross", 2000), ("uniform-lm", 5000),
@@ -161,11 +178,15 @@ def bench_stack(kind: str, n: int, budget_s: float,
     direct_s = d_elapsed if not extrapolated \
         else d_elapsed * n_cuts / d_evals
 
-    # engine path, as plan_cutpoint runs it (build + sweep + materialize)
-    t0 = time.perf_counter()
-    engine = ResidencyEngine(blocks, V5E)
-    cut_plan = plan_cutpoint(blocks, V5E, engine=engine)
-    engine_s = time.perf_counter() - t0
+    # engine path, as plan_cutpoint runs it (build + sweep + materialize);
+    # best-of-3 -- the whole path is milliseconds, so re-running it costs
+    # nothing and keeps the smoke gate's measured side burst-stable
+    engine_s = math.inf
+    for _ in range(3):
+        t0 = time.perf_counter()
+        engine = ResidencyEngine(blocks, V5E)
+        cut_plan = plan_cutpoint(blocks, V5E, engine=engine)
+        engine_s = min(engine_s, time.perf_counter() - t0)
 
     if check_equiv or not extrapolated:
         assert (cut_plan.est_seconds, cut_plan.hbm_bytes, cut_plan.cut) == \
@@ -210,6 +231,86 @@ def bench_stack(kind: str, n: int, budget_s: float,
     return row
 
 
+def measure_floor(rounds: int = 3) -> dict:
+    """The committed smoke-floor record: the engine's absolute cuts/sec on
+    ``FLOOR_STACK`` next to this machine's busy-loop calibration.
+
+    The two measurements are *interleaved* best-of-``rounds``: on bursty
+    container CPU a single-shot pairing can catch the engine on a fast
+    burst and the busy loop on a slow one, committing a floor whose
+    normalization then over-demands on any faster moment (the gate
+    failure artifact showed exactly this).  Taking the max of each across
+    interleaved rounds keeps the committed ratio burst-consistent."""
+    kind, n = FLOOR_STACK
+    blocks = make_stack(kind, n)
+    best_cuts = 0.0
+    best_busy = 0.0
+    for _ in range(rounds):
+        best_busy = max(best_busy, measure_busyloop_rate())
+        t0 = time.perf_counter()
+        engine = ResidencyEngine(blocks, V5E)
+        plan_cutpoint(blocks, V5E, engine=engine)
+        engine_s = time.perf_counter() - t0
+        best_cuts = max(best_cuts, (n + 1) / max(engine_s, 1e-9))
+    return {
+        "stack": f"{kind}@{n}",
+        "engine_cuts_per_sec": round(best_cuts, 1),
+        "busyloop_ops_per_sec": round(best_busy, 1),
+        "max_regression": MAX_REGRESSION,
+    }
+
+
+def smoke_floor_gate(results: dict, committed_path: Path) -> dict:
+    """Benchmark-regression gate: the residency engine's measured cuts/sec
+    on the floor stack must stay within ``max_regression`` of the
+    committed floor after busy-loop normalization (same scheme as the
+    batched-scorer gate in compile_throughput.py).  Returns the record
+    that lands in BENCH_residency_smoke.json; a failure is reported in
+    ``record["passed"]``/``record["fail_msg"]`` and raised by the caller
+    only *after* the artifact is written, so the diagnostic JSON survives
+    the exact failure it exists to explain."""
+    rate = measure_busyloop_rate()
+    floor = None
+    if committed_path.exists():
+        floor = json.loads(committed_path.read_text()).get("smoke_floor")
+    record: dict = {
+        "busyloop_ops_per_sec": round(rate, 1),
+        "measured": {s: r["engine_cuts_per_sec"]
+                     for s, r in results.items()},
+    }
+    if not floor:
+        print("residency gate: no committed smoke_floor -- measuring only")
+        return record
+    stack = floor["stack"]
+    if stack not in results:
+        print(f"residency gate: committed floor stack {stack!r} not among "
+              f"the smoke stacks -- measuring only (keep FLOOR_STACK and "
+              f"SMOKE_STACKS in sync)")
+        record["floor_stack_missing"] = stack
+        return record
+    measured = results[stack]["engine_cuts_per_sec"]
+    speed = rate / floor["busyloop_ops_per_sec"]
+    need = (floor["engine_cuts_per_sec"] * speed
+            * (1 - floor["max_regression"]))
+    record.update({
+        "floor_stack": stack,
+        "floor_cuts_per_sec": floor["engine_cuts_per_sec"],
+        "machine_speed_vs_floor": round(speed, 3),
+        "required_cuts_per_sec": round(need, 1),
+        "passed": measured >= need,
+    })
+    if measured >= need:
+        print(f"residency gate OK: {stack} {measured:.0f} cuts/s >= "
+              f"{need:.0f} required (machine speed {speed:.2f}x vs floor)")
+    else:
+        record["fail_msg"] = (
+            f"residency-engine regression gate: {stack} measured "
+            f"{measured:.0f} cuts/s < required {need:.0f} (committed floor "
+            f"{floor['engine_cuts_per_sec']:.0f} x machine speed "
+            f"{speed:.2f} x {1 - floor['max_regression']:.2f})")
+    return record
+
+
 def arch_table() -> list[dict]:
     """Regenerate the residency_lm.py report rows (one row per CASES cell,
     fanned out over the shared search-pool workers)."""
@@ -224,10 +325,21 @@ def arch_table() -> list[dict]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="short CI run: small stacks, equivalence asserted, "
-                         "no JSON written")
+                    help="short CI run: small stacks, equivalence + "
+                         "committed-floor gate asserted, writes "
+                         "BENCH_residency_smoke.json only")
+    ap.add_argument("--floor-only", action="store_true",
+                    help="re-measure only the committed smoke floor and "
+                         "splice it into the existing output JSON")
     ap.add_argument("-o", "--output", default="BENCH_residency.json")
     args = ap.parse_args()
+
+    if args.floor_only:
+        payload = json.loads(Path(args.output).read_text())
+        payload["smoke_floor"] = measure_floor()
+        Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"updated smoke_floor in {args.output}")
+        return
 
     stacks = SMOKE_STACKS if args.smoke else STACKS
     budget = 0.5 if args.smoke else 5.0
@@ -243,6 +355,14 @@ def main() -> None:
         # margin at >=2000 blocks is >=100x)
         assert worst > 3, f"engine sweep speedup regressed to {worst}x"
         print(f"smoke OK: min sweep speedup {worst}x")
+        committed = Path(__file__).resolve().parent.parent / args.output
+        gate = smoke_floor_gate(results, committed)
+        smoke_out = Path("BENCH_residency_smoke.json")
+        smoke_out.write_text(json.dumps(
+            {"stacks": results, "floor_gate": gate}, indent=2) + "\n")
+        print(f"wrote {smoke_out} (CI artifact; committed JSON untouched)")
+        # raised only now, after the diagnostic artifact is on disk
+        assert gate.get("passed", True), gate["fail_msg"]
         return
 
     payload = {
@@ -252,6 +372,7 @@ def main() -> None:
                 "(tests/test_residency_engine.py)",
         "stacks": results,
         "archs": arch_table(),
+        "smoke_floor": measure_floor(),
     }
     Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {args.output}")

@@ -21,11 +21,23 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import NamedTuple
 
+import numpy as np
+
 from repro.core.grouping import Group, GroupedGraph
 
 NUM_BUFFERS = 3
 SIDE_THRESHOLD = 64 << 10           # tensors <= 64 KB ride in the side space
 GRAPH_INPUT = -1                    # pseudo producer id of the input image
+
+# Integer encoding of ``AllocState.location`` shared by the export/import
+# round-trip below and the scan-style device replay (kernels/alloc_scan.py):
+# buffer ids {0,1,2} map to themselves, the two symbolic locations get the
+# codes past the last buffer, and an empty ``live_in_buffer`` slot is
+# ``LIVE_EMPTY`` (safe: real gids are >= 0 and the graph input never owns a
+# buffer).
+LOC_SIDE = NUM_BUFFERS
+LOC_DRAM = NUM_BUFFERS + 1
+LIVE_EMPTY = -1
 
 Policy = dict[int, str]             # gid -> 'row' | 'frame'
 
@@ -318,6 +330,85 @@ def allocate(gg: GroupedGraph, policy: Policy) -> Allocation:
     for step in graph_steps(gg):
         alloc_step(state, step, policy[step.gid])
     return state.alloc
+
+
+# --------------------------------------------------- state tensorization
+# ``AllocState`` is a handful of Python containers; the scan-style device
+# replay needs the same information as fixed-width integer arrays (one
+# lane per gid).  ``state_to_arrays`` / ``arrays_to_state`` are the
+# canonical encoding -- kernels/alloc_scan.py seeds its initial scan state
+# from the exported ``init_alloc_state`` and tests round-trip arbitrary
+# mid-replay snapshots through both directions.
+
+def state_to_arrays(state: AllocState) -> dict[str, np.ndarray]:
+    """Encode a (lean) allocator state as fixed-width integer arrays.
+
+    Layout (``n`` = group count; the trailing slot of the per-gid arrays
+    is the ``GRAPH_INPUT`` pseudo producer, mirroring the list encoding
+    where index ``-1`` aliases the last element):
+
+    ====================  =======================================
+    ``remaining``         (n+1,) int64 unmet consumer counts
+    ``location``          (n+1,) int8  ``LOC_*`` codes / buffer id
+    ``live``              (3,)   int64 owning gid or ``LIVE_EMPTY``
+    ``buff``              (3,)   int64 buffer byte maxima
+    ``side_buff``         ()     int64
+    ``boundary_writes``   (n,)   bool
+    ``boundary_reads``    (n,)   int64 bytes per consuming gid
+    ``spilled``           (n,)   bool
+    ====================  =======================================
+
+    The metrics-irrelevant assignment maps (``alloc_in`` etc.) and the
+    drained journals are intentionally not part of the encoding -- they
+    are exactly what ``lean`` replay states never carry."""
+    n = len(state.remaining) - 1
+    a = state.alloc
+    location = np.empty(n + 1, dtype=np.int8)
+    for i, loc in enumerate(state.location):
+        location[i] = (loc if type(loc) is int
+                       else LOC_SIDE if loc == "side" else LOC_DRAM)
+    live = np.full(NUM_BUFFERS, LIVE_EMPTY, dtype=np.int64)
+    for b, gid in state.live_in_buffer.items():
+        live[b] = gid
+    bw = np.zeros(n, dtype=bool)
+    bw[list(a.boundary_writes)] = True
+    br = np.zeros(n, dtype=np.int64)
+    for gid, v in a.boundary_reads.items():
+        br[gid] = v
+    spilled = np.zeros(n, dtype=bool)
+    spilled[list(a.spilled)] = True
+    return {
+        "remaining": np.asarray(state.remaining, dtype=np.int64),
+        "location": location,
+        "live": live,
+        "buff": np.asarray(a.buff, dtype=np.int64),
+        "side_buff": np.int64(a.side_buff),
+        "boundary_writes": bw,
+        "boundary_reads": br,
+        "spilled": spilled,
+    }
+
+
+def arrays_to_state(arrays: dict[str, np.ndarray],
+                    lean: bool = True) -> AllocState:
+    """Inverse of :func:`state_to_arrays`: rebuild a replayable
+    ``AllocState`` from the tensor encoding.  ``alloc_step`` can continue
+    from the result exactly as from the original snapshot."""
+    location: list[int | str] = [
+        int(c) if c < NUM_BUFFERS else ("side" if c == LOC_SIDE else "dram")
+        for c in arrays["location"].tolist()]
+    live = {b: gid for b, gid in enumerate(arrays["live"].tolist())
+            if gid != LIVE_EMPTY}
+    bw = {int(g) for g in np.flatnonzero(arrays["boundary_writes"])}
+    br_arr = arrays["boundary_reads"]
+    br = {int(g): int(br_arr[g]) for g in np.flatnonzero(br_arr)}
+    sp = {int(g) for g in np.flatnonzero(arrays["spilled"])}
+    alloc = Allocation(policy={}, buff=arrays["buff"].astype(int).tolist(),
+                       side_buff=int(arrays["side_buff"]), spilled=sp,
+                       boundary_writes=bw, boundary_reads=br)
+    return AllocState(alloc=alloc,
+                      remaining=arrays["remaining"].astype(int).tolist(),
+                      location=location, live_in_buffer=live, lean=lean)
 
 
 def spill_is_long_path(gg: GroupedGraph, gid: int,

@@ -91,19 +91,22 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
                   policy: dict[int, str] | None = None,
                   exhaustive_limit: int = EXHAUSTIVE_LIMIT,
                   workers: int | None = 1,
-                  batch_size: int = DEFAULT_BATCH_SIZE) -> ExecutionPlan:
+                  batch_size: int = DEFAULT_BATCH_SIZE,
+                  replay: str = "journal") -> ExecutionPlan:
     """Compile a CNN graph into an :class:`ExecutionPlan`.
 
-    ``objective``, ``exhaustive_limit``, ``workers`` and ``batch_size``
-    are forwarded to :func:`repro.core.cutpoint.search` (see its docstring
-    for the full contract); in short, ``objective`` picks what the
-    optimizer minimizes ("latency" / "sram" / "dram"),
+    ``objective``, ``exhaustive_limit``, ``workers``, ``batch_size`` and
+    ``replay`` are forwarded to :func:`repro.core.cutpoint.search` (see
+    its docstring for the full contract); in short, ``objective`` picks
+    what the optimizer minimizes ("latency" / "sram" / "dram"),
     ``exhaustive_limit`` bounds the cut space enumerated exhaustively
     before coordinate descent takes over, ``workers`` > 1 (or ``None``
-    for all cores) parallelizes the search across processes, and
+    for all cores) parallelizes the search across processes,
     ``batch_size`` sets how many cut tuples each
-    ``CutpointEngine.score_batch`` call scores at once.  Both
-    parallelism knobs leave the result bit-identical.
+    ``CutpointEngine.score_batch`` call scores at once, and ``replay``
+    selects the scorer's allocator replay ("journal" Python replay vs
+    the "device" tensorized scan).  All three parallelism/staging knobs
+    leave the result bit-identical.
 
     If ``policy`` is given (gid -> "row"/"frame"), the optimizer is
     skipped and the policy is compiled verbatim -- this is how the all-row
@@ -116,7 +119,7 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
     if policy is None:
         result = search(gg, hw, objective=objective,
                         exhaustive_limit=exhaustive_limit, workers=workers,
-                        batch_size=batch_size)
+                        batch_size=batch_size, replay=replay)
         cand = result.best
         alloc = cand.alloc
     else:

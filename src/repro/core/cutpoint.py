@@ -54,6 +54,18 @@ bit-for-bit on every metric and is built from three pieces:
   knob (results and ``evaluated`` counts are identical for every batch
   size), and ``kernels/score_batch.py`` stages the same B x G reduction
   as a Pallas TPU kernel behind ``backend="pallas"``.
+* **Device allocator replay** -- behind ``replay="device"``,
+  ``score_batch`` skips the Python replay altogether: the frame-mask
+  matrix is computed directly from the cut tuples (three gathers) and
+  the whole batch runs through the *tensorized allocator state machine*
+  of ``kernels/alloc_scan.py`` -- ``alloc_step`` re-expressed as a
+  data-independent update rule over fixed-width integer arrays, scanned
+  once over groups for all B candidates (numpy reference /
+  ``jax.lax.scan`` / Pallas kernel via ``alloc_backend``, all
+  integer-exact).  The journal path stays the default and the two are
+  bit-identical, including memo contents and ``evaluations``
+  (tests/test_alloc_scan.py), which is what makes the whole search loop
+  end-to-end array-programmable instead of Python-orchestrated.
 
 Oracle contract: ``CutpointEngine.evaluate(cuts)`` returns the same
 ``latency_cycles`` / ``dram_total`` / ``dram_fm`` / ``sram_total`` /
@@ -246,13 +258,25 @@ class CutpointEngine:
     def __init__(self, gg: GroupedGraph, hw: FPGAConfig,
                  blocks: list[Block] | None = None,
                  runs: list[list[int]] | None = None,
-                 backend: str = "numpy"):
+                 backend: str = "numpy", replay: str = "journal",
+                 alloc_backend: str | None = None):
         self.gg = gg
         self.hw = hw
         # "numpy" (oracle-exact, default) or "pallas" (the staged on-device
         # batch reduction, float32 -- see kernels/score_batch.py)
         self.backend = backend
+        # "journal" (per-candidate checkpointed Python replay, default) or
+        # "device" (tensorized allocator scan over the whole batch, see
+        # kernels/alloc_scan.py) -- the default replay mode of score_batch
+        self.replay = replay
+        # which alloc_scan implementation the device replay runs:
+        # "reference" (numpy) / "scan" (jax.lax.scan) / "pallas"; all three
+        # are integer-exact, so any choice preserves bit-identity
+        self.alloc_backend = (alloc_backend if alloc_backend is not None
+                              else ("pallas" if backend == "pallas"
+                                    else "reference"))
         self._kt = None               # packed kernel tables, built lazily
+        self._at = None               # packed alloc-scan tables, lazy
         self.blocks = blocks if blocks is not None else split_blocks(gg)
         self.runs = runs if runs is not None else monotone_runs(self.blocks)
         self.dirs = [_run_direction(self.blocks, r) for r in self.runs]
@@ -298,6 +322,21 @@ class CutpointEngine:
         self._cur: tuple[int, ...] | None = None
         self._cache: dict[tuple[int, ...], CandidateMetrics] = {}
         self.evaluations = 0              # cache misses (actual replays)
+        # per-group (run index, block position, direction) -- the whole
+        # frame-mask matrix of a batch is then three gathers, no replay
+        run_of = np.zeros(n, dtype=np.int64)
+        pos_of = np.zeros(n, dtype=np.int64)
+        dir_neg = np.zeros(n, dtype=bool)
+        for r, run in enumerate(self.runs):
+            d = self.dirs[r]
+            for pos, b in enumerate(run):
+                lo, hi = self._block_span[b]
+                run_of[lo:hi] = r
+                pos_of[lo:hi] = pos
+                dir_neg[lo:hi] = d < 0
+        self._run_of = run_of
+        self._pos_of = pos_of
+        self._dir_neg = dir_neg
 
     def _replay(self, cuts: tuple[int, ...],
                 rd: int | None = None) -> Allocation:
@@ -468,9 +507,37 @@ class CutpointEngine:
             self._cache[cuts] = m
         return m
 
+    # ------------------------------------------------------- device replay
+    def _frame_matrix(self, tuples: list) -> np.ndarray:
+        """B x G frame-mask matrix straight from the cut tuples.
+
+        Exactly the masks the checkpointed replay paints block-by-block
+        (``policy_from_cuts`` semantics), but as three vectorized gathers
+        -- no allocator involved, so the device replay can start from the
+        masks alone."""
+        nr = len(self.runs)
+        b = len(tuples)
+        if not nr or not b:
+            return np.zeros((b, len(self.gg.groups)), dtype=bool)
+        arr = np.fromiter(itertools.chain.from_iterable(tuples),
+                          dtype=np.int64, count=b * nr).reshape(b, nr)
+        cut = arr[:, self._run_of]
+        pos = self._pos_of[None, :]
+        return np.where(self._dir_neg[None, :], pos >= cut, pos < cut)
+
+    def _device_replay(self, frame: np.ndarray):
+        """Tensorized allocator replay of a whole frame-mask batch
+        (kernels/alloc_scan.py) under ``self.alloc_backend``."""
+        if self._at is None:
+            from repro.kernels.alloc_scan import pack_alloc_tables
+            self._at = pack_alloc_tables(self.gg, self.hw)
+        from repro.kernels.alloc_scan import alloc_scan
+        return alloc_scan(self._at, frame, backend=self.alloc_backend)
+
     # ------------------------------------------------------ batched scoring
     def score_batch(self, cuts_batch, memoize: bool = True,
-                    backend: str | None = None) -> list[CandidateMetrics]:
+                    backend: str | None = None,
+                    replay: str | None = None) -> list[CandidateMetrics]:
         """Metrics for a batch of B cut tuples in one set of 2-D reductions.
 
         The batch is expanded into a B x G frame-mask matrix plus a B x G
@@ -495,9 +562,25 @@ class CutpointEngine:
         results are never written into the memo, so ``evaluate``'s
         bit-exact contract on the same engine instance is preserved
         (cached exact entries are still served to pallas callers).
+
+        ``replay`` selects how the per-candidate allocator quantities are
+        produced: ``"journal"`` (default) is the checkpointed Python
+        replay above; ``"device"`` builds the frame-mask matrix directly
+        from the cut tuples and runs the whole batch through the
+        tensorized allocator scan (kernels/alloc_scan.py, integer-exact
+        under every ``alloc_backend``), leaving the journal checkpoints
+        untouched.  Both produce bit-identical CandidateMetrics and the
+        same memo/``evaluations`` bookkeeping, so every caller --
+        ``search``, ``coordinate_descent``, the pool workers,
+        ``compile_graph`` -- inherits the knob with byte-identical
+        results.
         """
         if backend is None:
             backend = self.backend
+        if replay is None:
+            replay = self.replay
+        if replay not in ("journal", "device"):
+            raise ValueError(f"unknown score_batch replay: {replay!r}")
         cuts_batch = list(cuts_batch)
         out: list[CandidateMetrics | None] = [None] * len(cuts_batch)
         slots: list[tuple[int, int]] = []      # (batch index, miss index)
@@ -522,44 +605,65 @@ class CutpointEngine:
             if not miss:
                 return out
 
-        # --- vectorized shared-prefix lengths: rd[j] = first run whose cut
-        # differs from miss[j-1] (the engine replays the batch in order, so
-        # the previous miss *is* the engine's current tuple); miss[0]
-        # compares against the engine's real current tuple inside _replay.
-        nr = len(self.runs)
-        if len(miss) > 1 and nr:
-            arr = np.fromiter(itertools.chain.from_iterable(miss),
-                              dtype=np.int64,
-                              count=len(miss) * nr).reshape(len(miss), nr)
-            neq = arr[1:] != arr[:-1]
-            rds = np.where(neq.any(axis=1), neq.argmax(axis=1),
-                           nr - 1).tolist()
+        if replay == "device":
+            # --- tensorized allocator scan over the whole batch: frame
+            # masks straight from the cut tuples, one alloc_scan call for
+            # every per-candidate quantity the reductions below need.
+            # .tolist() materializes exact Python ints, so the assembled
+            # CandidateMetrics (and the memo) are byte-identical to the
+            # journal path's.
+            frame = self._frame_matrix(miss)
+            res = self._device_replay(frame)
+            self.evaluations += len(miss)
+            io = res.io.astype(np.float64)
+            boundary_fm = res.bfm.tolist()
+            feas_spills = res.feasible.tolist()
+            cand_terms = [(b[0], b[1], b[2], s, w)
+                          for b, s, w in zip(res.buff.tolist(),
+                                             res.side_buff.tolist(),
+                                             res.wrf.tolist())]
         else:
-            rds = []
+            # --- vectorized shared-prefix lengths: rd[j] = first run
+            # whose cut differs from miss[j-1] (the engine replays the
+            # batch in order, so the previous miss *is* the engine's
+            # current tuple); miss[0] compares against the engine's real
+            # current tuple inside _replay.
+            nr = len(self.runs)
+            if len(miss) > 1 and nr:
+                arr = np.fromiter(itertools.chain.from_iterable(miss),
+                                  dtype=np.int64,
+                                  count=len(miss) * nr).reshape(len(miss),
+                                                                nr)
+                neq = arr[1:] != arr[:-1]
+                rds = np.where(neq.any(axis=1), neq.argmax(axis=1),
+                               nr - 1).tolist()
+            else:
+                rds = []
 
-        # --- replay each distinct miss; the incremental extraction state
-        # (self._x_*) holds the candidate-dependent scalars afterwards, so
-        # the per-candidate work here is four row/scalar copies
-        n = len(self.gg.groups)
-        frame = np.zeros((len(miss), n), dtype=bool)
-        io_rows: list[list] = []                 # per-candidate io vectors
-        boundary_fm: list[int] = []              # dram boundary/spill bytes
-        cand_terms: list[tuple] = []             # sram per-candidate terms
-        feas_spills: list[bool] = []             # spill feasibility
-        replay = self._replay
-        my_frame = self._frame
-        x_io = self._x_io
-        for j, cuts in enumerate(miss):
-            self.evaluations += 1
-            alloc = replay(cuts, rds[j - 1] if j else None)
-            frame[j] = my_frame
-            io_rows.append(list(x_io))
-            b = alloc.buff
-            cand_terms.append((b[0], b[1], b[2], alloc.side_buff,
-                               self._x_wrf))
-            boundary_fm.append(self._x_bfm)
-            feas_spills.append(self._x_feas)
-        io = np.asarray(io_rows, dtype=np.float64)
+            # --- replay each distinct miss; the incremental extraction
+            # state (self._x_*) holds the candidate-dependent scalars
+            # afterwards, so the per-candidate work here is four
+            # row/scalar copies
+            n = len(self.gg.groups)
+            frame = np.zeros((len(miss), n), dtype=bool)
+            io_rows: list[list] = []             # per-candidate io vectors
+            boundary_fm: list[int] = []          # dram boundary/spill bytes
+            cand_terms: list[tuple] = []         # sram per-candidate terms
+            feas_spills: list[bool] = []         # spill feasibility
+            _replay = self._replay
+            my_frame = self._frame
+            x_io = self._x_io
+            for j, cuts in enumerate(miss):
+                self.evaluations += 1
+                alloc = _replay(cuts, rds[j - 1] if j else None)
+                frame[j] = my_frame
+                io_rows.append(list(x_io))
+                b = alloc.buff
+                cand_terms.append((b[0], b[1], b[2], alloc.side_buff,
+                                   self._x_wrf))
+                boundary_fm.append(self._x_bfm)
+                feas_spills.append(self._x_feas)
+            io = np.asarray(io_rows, dtype=np.float64)
 
         # --- one set of 2-D reductions across the whole batch
         if backend == "pallas":
@@ -695,7 +799,8 @@ def descent_starts(blocks: list[Block],
 def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
            exhaustive_limit: int = EXHAUSTIVE_LIMIT,
            workers: int | None = 1,
-           batch_size: int = DEFAULT_BATCH_SIZE) -> SearchResult:
+           batch_size: int = DEFAULT_BATCH_SIZE,
+           replay: str = "journal") -> SearchResult:
     """Find the best cut tuple for ``gg`` on ``hw``.
 
     Knobs
@@ -724,6 +829,12 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
         per-tuple ``evaluate`` loop.  Like ``workers``, this is purely a
         wall-clock knob: the returned Candidate and the ``evaluated``
         count are identical for every batch size.
+    replay:
+        Allocator-replay mode of the batched scorer: ``"journal"``
+        (default, checkpointed Python replay) or ``"device"`` (the
+        tensorized allocator scan of kernels/alloc_scan.py).  A third
+        purely wall-clock knob -- Candidates and ``evaluated`` are
+        byte-identical either way (tests/test_alloc_scan.py).
 
     Returns a :class:`SearchResult` whose ``best`` Candidate is
     materialized through the direct oracle, so it is exactly what the
@@ -734,7 +845,7 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
         with ParallelSearchDriver(workers=workers) as driver:
             return driver.search(gg, hw, objective=objective,
                                  exhaustive_limit=exhaustive_limit,
-                                 batch_size=batch_size)
+                                 batch_size=batch_size, replay=replay)
 
     blocks = split_blocks(gg)
     runs = monotone_runs(blocks)
@@ -742,7 +853,7 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
     for r in runs:
         space *= len(r) + 1
 
-    engine = CutpointEngine(gg, hw, blocks, runs)
+    engine = CutpointEngine(gg, hw, blocks, runs, replay=replay)
 
     def materialize(best: CandidateMetrics) -> SearchResult:
         # Re-run the winner through the direct oracle so the returned

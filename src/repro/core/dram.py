@@ -43,14 +43,21 @@ def row_fm_bytes(gg: GroupedGraph, g: Group) -> int:
         # Feature-merging redirect (TensorRT-style, §III-A): the
         # producers already wrote into the concat destination.
         return 0
-    sc = gg.shortcut_source_group(g)
-    sc_bytes = gg.groups[sc].out_size if sc is not None else 0
-    fm = g.in_size + g.out_size + sc_bytes
-    if g.kind == "add" and g.head.kind == "add":
-        # standalone eltwise: in+out counted; second operand:
+    fm = g.in_size + g.out_size
+    if g.head.kind == "add":
+        # Standalone eltwise: in+out counted above; every extra operand is
+        # read once.  group_inputs[1:] already includes the shortcut
+        # source, so the fused-shortcut term below must NOT be added on
+        # top (it used to be, double-counting the second operand -- the
+        # memory simulator counts 2 reads + 1 write, tests/
+        # test_simulator_audit.py keeps the two in lock-step).
         fm += sum(gg.groups[i].out_size
                   for i in gg.group_inputs(g)[1:]
                   if i >= 0)
+    else:
+        sc = gg.shortcut_source_group(g)
+        if sc is not None:            # fused add: one shortcut read
+            fm += gg.groups[sc].out_size
     return fm
 
 

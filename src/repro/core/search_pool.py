@@ -87,11 +87,12 @@ _ENGINE: "_cp.CutpointEngine | None" = None
 _TEST_FAIL_HOOK: str | None = None
 
 
-def _worker_engine(token: tuple, payload: bytes) -> "_cp.CutpointEngine":
+def _worker_engine(token: tuple, payload: bytes,
+                   replay: str = "journal") -> "_cp.CutpointEngine":
     global _ENGINE_TOKEN, _ENGINE
     if token != _ENGINE_TOKEN:
         gg, hw = pickle.loads(payload)
-        _ENGINE = _cp.CutpointEngine(gg, hw)
+        _ENGINE = _cp.CutpointEngine(gg, hw, replay=replay)
         _ENGINE_TOKEN = token
     return _ENGINE
 
@@ -111,9 +112,9 @@ def _run_subspace(task) -> tuple["_cp.CandidateMetrics", int]:
     production path); the argmin and the evaluation count are identical
     either way.
     """
-    token, payload, prefix, suffix_dims, objective, batch_size = task
+    token, payload, prefix, suffix_dims, objective, batch_size, replay = task
     _maybe_fail()
-    engine = _worker_engine(token, payload)
+    engine = _worker_engine(token, payload, replay)
     before = engine.evaluations
     best = None
     tuples = (prefix + suffix for suffix in
@@ -143,9 +144,9 @@ def _run_descent(task) -> tuple["_cp.CandidateMetrics", frozenset]:
     the descent trajectory -- so the returned point is the one the serial
     loop reaches from this start, by construction.
     """
-    token, payload, start, objective, batch_size = task
+    token, payload, start, objective, batch_size, replay = task
     _maybe_fail()
-    engine = _worker_engine(token, payload)
+    engine = _worker_engine(token, payload, replay)
     visited: set[tuple[int, ...]] = set()
     cur = _cp.coordinate_descent(engine, start, objective,
                                  on_eval=visited.add, batch_size=batch_size)
@@ -242,15 +243,18 @@ class ParallelSearchDriver:
     def search(self, gg, hw, objective: str = "latency",
                exhaustive_limit: int | None = None,
                min_parallel_space: int = MIN_PARALLEL_SPACE,
-               batch_size: int | None = None):
+               batch_size: int | None = None,
+               replay: str = "journal"):
         """Parallel ``cutpoint.search``, bit-identical to the serial result.
 
         Same knobs as :func:`repro.core.cutpoint.search` (including
         ``batch_size``, which each worker forwards to
-        ``CutpointEngine.score_batch`` over its own sub-space);
-        additionally ``min_parallel_space`` sets the space size below
-        which the serial path runs directly (the result is identical
-        either way -- this is purely a fixed-cost cutoff).
+        ``CutpointEngine.score_batch`` over its own sub-space, and
+        ``replay``, which selects the journal vs device allocator replay
+        inside each worker's engine); additionally ``min_parallel_space``
+        sets the space size below which the serial path runs directly
+        (the result is identical either way -- this is purely a
+        fixed-cost cutoff).
         """
         if exhaustive_limit is None:
             exhaustive_limit = _cp.EXHAUSTIVE_LIMIT
@@ -266,17 +270,17 @@ class ParallelSearchDriver:
                 or (exhaustive and space < min_parallel_space)):
             return _cp.search(gg, hw, objective=objective,
                               exhaustive_limit=exhaustive_limit,
-                              batch_size=batch_size)
+                              batch_size=batch_size, replay=replay)
 
         self._searches += 1
-        token = (os.getpid(), id(self), self._searches)
+        token = (os.getpid(), id(self), self._searches, replay)
         payload = pickle.dumps((gg, hw), protocol=pickle.HIGHEST_PROTOCOL)
 
         if exhaustive:
             prefixes, suffix_dims = partition_space(
                 runs, self.workers * TASKS_PER_WORKER)
-            tasks = [(token, payload, p, suffix_dims, objective, batch_size)
-                     for p in prefixes]
+            tasks = [(token, payload, p, suffix_dims, objective, batch_size,
+                      replay) for p in prefixes]
             results = self.map(_run_subspace, tasks)
             evaluated = sum(n for _, n in results)
             # (objective key, cut tuple) == first optimum in product order.
@@ -284,7 +288,7 @@ class ParallelSearchDriver:
                        key=lambda m: (_cp._key(m, objective), m.cuts))
         else:
             starts = _cp.descent_starts(blocks, runs)
-            tasks = [(token, payload, s, objective, batch_size)
+            tasks = [(token, payload, s, objective, batch_size, replay)
                      for s in starts]
             results = self.map(_run_descent, tasks)
             visited: set = set()

@@ -73,13 +73,19 @@ def row_latency(gg: GroupedGraph, g: Group, hw: FPGAConfig,
     if g.kind in ("concat", "route"):
         return hw.group_overhead_cycles              # redirect: free
     bpc = hw.dram_bytes_per_cycle
-    sc = gg.shortcut_source_group(g)
-    sc_bytes = gg.groups[sc].out_size if sc is not None else 0
-    extra_in = 0
+    extra = 0
     if g.head.kind == "add":
-        extra_in = sum(gg.groups[i].out_size
-                       for i in gg.group_inputs(g)[1:] if i >= 0)
-    fm_bytes = g.in_size + g.out_size + sc_bytes + extra_in
+        # Standalone eltwise: every extra operand streamed once.  The
+        # shortcut source is among group_inputs[1:], so the fused-shortcut
+        # term below would double-count it (dram.row_fm_bytes has the
+        # same split; the simulator byte counters arbitrate).
+        extra = sum(gg.groups[i].out_size
+                    for i in gg.group_inputs(g)[1:] if i >= 0)
+    else:
+        sc = gg.shortcut_source_group(g)
+        if sc is not None:            # fused add: one shortcut read
+            extra = gg.groups[sc].out_size
+    fm_bytes = g.in_size + g.out_size + extra
     weight_load = g.weight_size / bpc
     return weight_load + max(comp, fm_bytes / bpc) + hw.group_overhead_cycles
 

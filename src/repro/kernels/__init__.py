@@ -1,3 +1,15 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Resident kernels for this reproduction's search loop:
+#   score_batch.py -- B x G mask-matrix candidate pricing (float32 Pallas
+#                     staging of the batched cost-model reductions,
+#                     CutpointEngine backend="pallas")
+#   alloc_scan.py  -- tensorized allocator replay: Algorithm 1's
+#                     sequential state machine as a scan over groups
+#                     (numpy reference / jax.lax.scan / Pallas, all
+#                     integer-exact; CutpointEngine replay="device")
+# Both fall back to interpret mode off-TPU and are validated against
+# their numpy references (tests/test_score_batch.py,
+# tests/test_alloc_scan.py) in the kernels-interpret CI job.

@@ -30,6 +30,11 @@ with :func:`score_batch_ref` (the float32 numpy reference below), which
 tests/test_score_batch.py enforces in interpret mode, exactly like the
 other kernels in this package validate against kernels/ref.py.  On hosts
 without a TPU the wrapper automatically falls back to interpret mode.
+
+The tiling/layout helpers here (``LANES``/``SUBLANES``/``_pad_up``/
+``_on_tpu``) are shared with the allocator-replay scan kernel
+(kernels/alloc_scan.py), which uses the same candidates-on-sublanes,
+gids-on-lanes layout for its state rows.
 """
 from __future__ import annotations
 
@@ -56,6 +61,17 @@ TABLE_KEYS = ("comp", "row", "weight", "side", "row_fm", "compute",
 
 def _pad_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def _on_tpu() -> bool:
+    """Whether the default jax device is a TPU (compiled-vs-interpret
+    auto-selection for this kernel and kernels/alloc_scan.py)."""
+    if not HAVE_JAX:
+        return False
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:                     # pragma: no cover
+        return False
 
 
 def pack_tables(lt, dt, st) -> dict:
@@ -175,12 +191,6 @@ if HAVE_JAX:
         )
         fn = _CALL_CACHE[key] = jax.jit(call)
         return fn
-
-    def _on_tpu() -> bool:
-        try:
-            return jax.devices()[0].platform == "tpu"
-        except Exception:                 # pragma: no cover
-            return False
 
     def score_batch_pallas(tables: dict, frame: np.ndarray, io: np.ndarray,
                            bpc: float, overhead: float,

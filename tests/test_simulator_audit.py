@@ -1,0 +1,52 @@
+"""Dry-mode memory-simulator audit of the analytical DRAM model.
+
+``Simulator(execute=False)`` walks the compiled instruction stream
+against the explicit memory model and counts every DRAM byte; the
+analytical model (core/dram.py, eqs. (8)-(9)) must agree exactly -- for
+every zoo net's *compiled* plan and for the all-row / all-frame corner
+policies.  This cross-check is what exposed (and now pins) the
+standalone row-mode ``add`` double count: ``row_fm_bytes`` charged the
+second operand both as the fused-shortcut term and as an extra-operand
+read, while the hardware does 2 reads + 1 write."""
+import pytest
+
+from repro.cnn import build_cnn
+from repro.core.compiler import (all_frame_policy, all_row_policy,
+                                 compile_graph)
+from repro.core.grouping import group_nodes
+from repro.core.simulator import simulate
+
+ZOO = [("vgg16-conv", 224), ("yolov2", 416), ("yolov3", 416),
+       ("resnet50", 224), ("resnet152", 224), ("efficientnet-b1", 256),
+       ("retinanet", 512), ("mobilenet-v3", 224)]
+
+# Keeps detector-scale searches on the coordinate-descent path so the
+# whole-zoo audit stays a tier-1-friendly few seconds; the plan is a real
+# optimizer output either way.
+AUDIT_LIMIT = 50_000
+
+
+def _audit(plan, ctx):
+    _, counters = simulate(plan.grouped, plan.alloc, plan.instructions,
+                           execute=False)
+    assert counters.weight_reads == plan.dram.weight_bytes, ctx
+    assert counters.fm_total == plan.dram.fm_bytes, (
+        f"{ctx}: simulator {counters.fm_total} != model "
+        f"{plan.dram.fm_bytes} (drift "
+        f"{counters.fm_total - plan.dram.fm_bytes:+d})")
+
+
+@pytest.mark.parametrize("name,size", ZOO)
+def test_fm_counters_match_model_on_compiled_plan(name, size):
+    plan = compile_graph(build_cnn(name, size),
+                         exhaustive_limit=AUDIT_LIMIT)
+    _audit(plan, f"{name}@{size} optimized")
+
+
+@pytest.mark.parametrize("name,size", ZOO)
+def test_fm_counters_match_model_on_corner_policies(name, size):
+    g = build_cnn(name, size)
+    gg = group_nodes(g)
+    for policy_fn in (all_row_policy, all_frame_policy):
+        plan = compile_graph(g, policy=policy_fn(gg))
+        _audit(plan, f"{name}@{size} {policy_fn.__name__}")
