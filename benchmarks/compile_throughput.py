@@ -41,9 +41,11 @@ from __future__ import annotations
 import argparse
 import itertools
 import json
+import multiprocessing as _mp
 import os
 import pickle
 import sys
+import tempfile
 import time
 from pathlib import Path
 
@@ -57,7 +59,10 @@ from repro.core.cutpoint import (DEFAULT_BATCH_SIZE,             # noqa: E402
 from repro.core.grouping import group_nodes                      # noqa: E402
 from repro.core.hw import KCU1500                                # noqa: E402
 from repro.core.search_pool import (ParallelSearchDriver,        # noqa: E402
-                                    _run_subspace, partition_space)
+                                    SearchPreempted, _run_subspace,
+                                    partition_space)
+from repro.runtime import chaos                                  # noqa: E402
+from repro.runtime.fault_tolerance import PreemptionGuard        # noqa: E402
 
 try:                                                             # noqa: E402
     from busyloop import measure_busyloop_rate, measure_parallel_capacity
@@ -123,9 +128,9 @@ def bench_workers_sweep(name: str, size: int, worker_counts: list[int],
             with ParallelSearchDriver(workers=w) as driver:
                 results = driver.map(_run_subspace, tasks)
         wall = time.perf_counter() - t0
-        evals = sum(n for _, n in results)
+        evals = sum(n for _, n, _ in results)
         assert evals == tuples
-        best = min((m for m, _ in results),
+        best = min((m for m, _, _ in results),
                    key=lambda m: (_key(m, "latency"), m.cuts))
         argmins.add(best.cuts)
         eps = evals / wall
@@ -187,9 +192,9 @@ def bench_batched_slice(name: str = "yolov2", size: int = 416,
             t0 = time.perf_counter()
             results = [_run_subspace(t) for t in tasks]
             wall = time.perf_counter() - t0
-            evals = sum(n for _, n in results)
+            evals = sum(n for _, n, _ in results)
             assert evals == tuples
-            best = min((m for m, _ in results),
+            best = min((m for m, _, _ in results),
                        key=lambda m: (_key(m, "latency"), m.cuts))
             argmins.add(best.cuts)
             eps = evals / wall
@@ -289,6 +294,132 @@ def bench_alloc_replay(name: str = "yolov2", size: int = 416,
                 "contract); pallas_interpret is un-compiled kernel "
                 "emulation measured on a few batches",
     }
+
+
+def bench_chaos(name: str = "yolov2", size: int = 416,
+                n_tasks: int = 24, workers: int = 2,
+                max_overhead: float = 0.15) -> dict:
+    """Fault-tolerance benchmark + gate on a yolov2 slice (the PR 6
+    acceptance scenario at benchmark scale).
+
+    Pushes the *same* fixed slice of yolov2's partitioned cut space
+    through the pool four ways -- clean; with an injected worker death
+    (seeded chaos harness: the pool heals, the lost task is re-dispatched,
+    the run completes); preempted by a latched SIGTERM (clean drain,
+    completed tasks journaled, ``SearchPreempted``); and resumed from
+    that journal -- asserting every completed run's ``SearchResult`` is
+    byte-identical to the clean one (cuts, metrics, ``evaluated``) with
+    the recovery events surfaced, and gating the kill run's overhead at
+    ``max_overhead`` vs the clean floor (both walls normalized by the
+    busy-loop calibration taken next to each run, so a CPU burst between
+    runs doesn't fake a regression).  Failures land in the returned
+    record (``passed``/``fail_msg``) so the caller can write the
+    BENCH_chaos.json artifact *before* raising."""
+    gg = group_nodes(build_cnn(name, size))
+    blocks = split_blocks(gg)
+    runs = monotone_runs(blocks)
+    prefixes, suffix_dims = partition_space(runs, target_tasks=256)
+    prefixes = prefixes[:n_tasks]
+    task_size = 1
+    for d in suffix_dims:
+        task_size *= d + 1
+
+    def run_slice(tag, injector=None, guard=None, resume_dir=None,
+                  expect_preempt=False):
+        if injector is not None:
+            chaos.install(injector)
+        try:
+            rate = measure_busyloop_rate()
+            t0 = time.perf_counter()
+            with ParallelSearchDriver(workers=workers, mp_context="fork",
+                                      guard=guard) as d:
+                try:
+                    res = d.run_subspaces(gg, KCU1500, prefixes,
+                                          suffix_dims,
+                                          resume_dir=resume_dir,
+                                          blocks=blocks, runs=runs)
+                except SearchPreempted:
+                    assert expect_preempt, "unexpected preemption"
+                    res = None
+            wall = time.perf_counter() - t0
+        finally:
+            if injector is not None:
+                chaos.uninstall()
+        ev = [] if res is None else [e.kind for e in res.events]
+        print(f"chaos {tag}: {wall:.1f}s busyloop={rate:.0f}/s "
+              f"events={ev or ('preempted' if res is None else 'none')}")
+        return res, wall, rate
+
+    def assert_identical(res, ctx):
+        assert res.best.cuts == clean.best.cuts, ctx
+        for f in METRICS:
+            assert getattr(res.best, f) == getattr(clean.best, f), (ctx, f)
+        assert res.evaluated == clean.evaluated, ctx
+
+    clean, clean_wall, clean_rate = run_slice("clean")
+    assert not clean.events
+
+    # injected worker death mid-sweep: the task at the slice midpoint is
+    # hard-killed on its first attempt; the pool heals and re-dispatches
+    doomed = prefixes[n_tasks // 2]
+    inj = chaos.ChaosInjector(
+        events={("task", doomed): chaos.ChaosEvent("kill")})
+    with tempfile.TemporaryDirectory() as td:
+        killed, kill_wall, kill_rate = run_slice("worker-kill", injector=inj,
+                                                 resume_dir=td)
+        assert_identical(killed, "worker-kill")
+        kinds = [e.kind for e in killed.events]
+        assert "retry" in kinds, kinds
+
+    # SIGTERM drain: the latched guard stops dispatch, in-flight tasks
+    # finish and journal, the re-run resumes from the journal
+    with tempfile.TemporaryDirectory() as td:
+        guard = PreemptionGuard()
+        guard.request()                   # as the SIGTERM handler would
+        _, preempt_wall, _ = run_slice("sigterm-drain", guard=guard,
+                                       resume_dir=td, expect_preempt=True)
+        journaled = len(list(Path(td).glob("search_*/task_*.rec")))
+        resumed, resume_wall, _ = run_slice("resume", resume_dir=td)
+        assert_identical(resumed, "resume")
+        n_resume = sum(1 for e in resumed.events if e.kind == "resume")
+        assert n_resume == journaled
+
+    # overhead gate: busy-loop-normalized work (wall x concurrent
+    # busy-loop rate) of the kill run vs the clean floor
+    overhead = (kill_wall * kill_rate) / (clean_wall * clean_rate) - 1
+    record = {
+        "network": f"{name}@{size}",
+        "tasks": n_tasks,
+        "tuples": n_tasks * task_size,
+        "workers": workers,
+        "clean_wall_s": round(clean_wall, 2),
+        "kill_wall_s": round(kill_wall, 2),
+        "preempt_drain_wall_s": round(preempt_wall, 2),
+        "resume_wall_s": round(resume_wall, 2),
+        "journaled_at_preempt": journaled,
+        "resumed_tasks": n_resume,
+        "busyloop_clean": round(clean_rate, 1),
+        "busyloop_kill": round(kill_rate, 1),
+        "kill_overhead_normalized": round(overhead, 4),
+        "max_overhead": max_overhead,
+        "bit_identical": True,            # asserted above for every run
+        "passed": overhead < max_overhead,
+        "note": "same fixed yolov2 slice through the pool clean / with an "
+                "injected worker death / SIGTERM-drained+resumed; all "
+                "completed runs asserted byte-identical (cuts, metrics, "
+                "evaluated); overhead is busy-loop-normalized",
+    }
+    if record["passed"]:
+        print(f"chaos gate OK: kill overhead "
+              f"{100 * overhead:.1f}% < {100 * max_overhead:.0f}%")
+    else:
+        record["fail_msg"] = (
+            f"chaos overhead gate: worker-kill run cost "
+            f"{100 * overhead:.1f}% over the clean floor "
+            f"(limit {100 * max_overhead:.0f}%; clean {clean_wall:.1f}s @ "
+            f"{clean_rate:.0f} ops/s vs kill {kill_wall:.1f}s @ "
+            f"{kill_rate:.0f} ops/s)")
+    return record
 
 
 def bench_network(name: str, size: int, budget_s: float,
@@ -459,8 +590,28 @@ def main() -> None:
     ap.add_argument("--alloc-only", action="store_true",
                     help="re-measure only the allocator-replay comparison "
                          "and splice it into the existing output JSON")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-tolerance benchmark+gate on the yolov2 "
+                         "slice (clean / worker-kill / SIGTERM-drain+"
+                         "resume, bit-identity asserted, <15%% normalized "
+                         "overhead); writes BENCH_chaos.json and runs "
+                         "INSTEAD of the throughput benches (combine with "
+                         "--smoke for the CI-sized slice)")
     ap.add_argument("-o", "--output", default="BENCH_compile.json")
     args = ap.parse_args()
+
+    if args.chaos:
+        if "fork" not in _mp.get_all_start_methods():
+            print("chaos bench requires the fork start method (workers "
+                  "must inherit the parent-installed injector); skipping")
+            return
+        record = bench_chaos(n_tasks=12 if args.smoke else 24)
+        out = Path("BENCH_chaos.json")
+        out.write_text(json.dumps(record, indent=2) + "\n")
+        print(f"wrote {out}")
+        # raised only now, after the diagnostic artifact is on disk
+        assert record["passed"], record["fail_msg"]
+        return
 
     if args.sweep_only:
         payload = json.loads(Path(args.output).read_text())

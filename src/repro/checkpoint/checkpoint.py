@@ -14,11 +14,18 @@ Properties needed at cluster scale:
   * elastic restore: the manifest stores global shapes, so restoring into
     a DIFFERENT mesh re-shards automatically via jax.device_put;
   * async mode double-buffers the host->disk copy off the training loop.
+
+The same codec (msgpack + zstd/zlib) and atomic-commit machinery also
+backs :class:`TaskJournal`, the task-granular record store the compiler's
+search pool uses for checkpointed compile resume (one digest-verified,
+atomically-renamed record per completed sub-space task -- see
+core/search_pool.py).
 """
 from __future__ import annotations
 
 import hashlib
 import json
+import os
 import threading
 from pathlib import Path
 
@@ -33,6 +40,36 @@ try:
     import zstandard
 except ImportError:            # optional dep: fall back to stdlib zlib
     zstandard = None
+
+
+# ------------------------------------------------------------ codec helpers
+def get_codec():
+    """(name, compress) -- zstd when available, stdlib zlib otherwise."""
+    if zstandard is not None:
+        return "zstd", zstandard.ZstdCompressor(level=3).compress
+    return "zlib", (lambda b: zlib.compress(b, 3))
+
+
+def get_decompressor(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed")
+        return zstandard.ZstdDecompressor().decompress
+    return zlib.decompress
+
+
+def atomic_write_bytes(path: Path, data: bytes) -> None:
+    """Crash-atomic file write: tmp file in the same directory, fsync,
+    then ``os.replace`` -- a reader never observes a partial file."""
+    path = Path(path)
+    tmp = path.parent / f".tmp_{path.name}.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def _flatten(tree):
@@ -66,10 +103,7 @@ def save(tree, directory: str | Path, step: int,
     final.mkdir(parents=True, exist_ok=True)
 
     named, _ = _flatten(tree)
-    if zstandard is not None:
-        codec, compress = "zstd", zstandard.ZstdCompressor(level=3).compress
-    else:
-        codec, compress = "zlib", (lambda b: zlib.compress(b, 3))
+    codec, compress = get_codec()
     manifest = {"step": step, "leaves": {}, "n_hosts": n_hosts,
                 "codec": codec}
     payload = {}
@@ -123,14 +157,7 @@ def restore(abstract_tree, directory: str | Path, step: int,
     manifest = json.loads(
         (directory / f"MANIFEST_{host_id}.json").read_text())
 
-    def decompressor(codec: str):
-        if codec == "zstd":
-            if zstandard is None:
-                raise RuntimeError(
-                    "checkpoint was written with zstd but zstandard is not "
-                    "installed")
-            return zstandard.ZstdDecompressor().decompress
-        return zlib.decompress
+    decompressor = get_decompressor
 
     # Each host chose its codec independently (zstd, or the zlib fallback
     # when zstandard is missing) and recorded it in its own manifest, so
@@ -206,3 +233,74 @@ class AsyncCheckpointer:
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+
+
+# ---------------------------------------------------------- task journal
+class JournalError(RuntimeError):
+    """A journal record exists but cannot be trusted (truncated file,
+    digest mismatch, undecodable payload).  Raised instead of silently
+    recomputing: a corrupt record means the journal directory is damaged
+    and resuming from its siblings may be equally wrong."""
+
+
+class TaskJournal:
+    """Task-granular completion journal for resumable batch compiles.
+
+    One journal covers one *search* (identified by ``search_key``, a
+    content hash of graph/hw/objective/partition -- the caller computes
+    it); each completed task commits one record file
+
+        <root>/search_<search_key>/task_<task_key>.rec
+
+    written with :func:`atomic_write_bytes` (tmp + fsync + ``os.replace``,
+    the same commit discipline as the training checkpoints above), so a
+    kill mid-write never corrupts the journal -- the record is either
+    fully present or absent.  Records are msgpack maps compressed with
+    the shared codec and carry a sha256 digest that :meth:`get` verifies
+    on read; any mismatch raises :class:`JournalError` rather than
+    resuming from damaged state.
+
+    Records must be msgpack-representable (ints, float64, bools, str,
+    lists/maps).  msgpack round-trips float64 bit-exactly, which is what
+    lets a resumed search reproduce byte-identical metrics.
+    """
+
+    def __init__(self, root, search_key: str):
+        self.dir = Path(root) / f"search_{search_key}"
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    @staticmethod
+    def task_key(obj) -> str:
+        """Stable 16-hex key for a task identity (e.g. a prefix tuple)."""
+        return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
+
+    def _path(self, task_key: str) -> Path:
+        return self.dir / f"task_{task_key}.rec"
+
+    def put(self, task_key: str, record: dict) -> None:
+        codec, compress = get_codec()
+        blob = compress(msgpack.packb(record, use_bin_type=True))
+        payload = msgpack.packb(
+            {"codec": codec, "digest": hashlib.sha256(blob).hexdigest(),
+             "blob": blob}, use_bin_type=True)
+        atomic_write_bytes(self._path(task_key), payload)
+
+    def get(self, task_key: str):
+        """The committed record for ``task_key``, or None if absent."""
+        path = self._path(task_key)
+        if not path.exists():
+            return None
+        try:
+            wrapper = msgpack.unpackb(path.read_bytes(), raw=False)
+            blob = wrapper["blob"]
+            if hashlib.sha256(blob).hexdigest() != wrapper["digest"]:
+                raise ValueError("digest mismatch")
+            decompress = get_decompressor(wrapper["codec"])
+            return msgpack.unpackb(decompress(blob), raw=False)
+        except Exception as e:
+            # any decode/digest/decompress failure: the record is damaged
+            raise JournalError(
+                f"corrupt task-journal record {path}: {e}") from e
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.dir.glob("task_*.rec"))

@@ -92,7 +92,11 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
                   exhaustive_limit: int = EXHAUSTIVE_LIMIT,
                   workers: int | None = 1,
                   batch_size: int = DEFAULT_BATCH_SIZE,
-                  replay: str = "journal") -> ExecutionPlan:
+                  replay: str = "journal",
+                  max_retries: int = 2,
+                  task_deadline_s: float | None = None,
+                  resume_dir=None,
+                  guard=None) -> ExecutionPlan:
     """Compile a CNN graph into an :class:`ExecutionPlan`.
 
     ``objective``, ``exhaustive_limit``, ``workers``, ``batch_size`` and
@@ -108,6 +112,15 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
     the "device" tensorized scan).  All three parallelism/staging knobs
     leave the result bit-identical.
 
+    The fault-tolerance knobs are forwarded too: ``max_retries`` bounds
+    per-task re-dispatch after transient worker failures,
+    ``task_deadline_s`` enables speculative straggler re-dispatch,
+    ``resume_dir`` turns on the task-granular completion journal so a
+    killed or preempted compile resumes where it left off (byte-identical
+    result, with the recovery surfaced on ``plan.search.events``), and
+    ``guard`` (a ``PreemptionGuard``) makes SIGTERM drain the search
+    cleanly (raising ``SearchPreempted``) instead of dying mid-task.
+
     If ``policy`` is given (gid -> "row"/"frame"), the optimizer is
     skipped and the policy is compiled verbatim -- this is how the all-row
     baseline and ablation plans are built; feasibility is still computed
@@ -119,7 +132,10 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
     if policy is None:
         result = search(gg, hw, objective=objective,
                         exhaustive_limit=exhaustive_limit, workers=workers,
-                        batch_size=batch_size, replay=replay)
+                        batch_size=batch_size, replay=replay,
+                        max_retries=max_retries,
+                        task_deadline_s=task_deadline_s,
+                        resume_dir=resume_dir, guard=guard)
         cand = result.best
         alloc = cand.alloc
     else:

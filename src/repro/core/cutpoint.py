@@ -202,6 +202,13 @@ class SearchResult:
     evaluated: int
     runs: list[list[int]]
     blocks: list[Block] = field(default_factory=list)
+    # Fault/recovery events (search_pool.FaultEvent) the parallel runtime
+    # took to produce this result -- retries, journal resumes, straggler
+    # duplicates, device-replay fallbacks.  Always empty on the serial
+    # path and on fault-free parallel runs; deliberately excluded from
+    # the bit-identity contract (same cuts/metrics/evaluated regardless
+    # of what the run survived).
+    events: list = field(default_factory=list)
 
 
 def evaluate(gg: GroupedGraph, blocks: list[Block], runs: list[list[int]],
@@ -800,7 +807,11 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
            exhaustive_limit: int = EXHAUSTIVE_LIMIT,
            workers: int | None = 1,
            batch_size: int = DEFAULT_BATCH_SIZE,
-           replay: str = "journal") -> SearchResult:
+           replay: str = "journal",
+           max_retries: int = 2,
+           task_deadline_s: float | None = None,
+           resume_dir=None,
+           guard=None) -> SearchResult:
     """Find the best cut tuple for ``gg`` on ``hw``.
 
     Knobs
@@ -835,17 +846,40 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
         tensorized allocator scan of kernels/alloc_scan.py).  A third
         purely wall-clock knob -- Candidates and ``evaluated`` are
         byte-identical either way (tests/test_alloc_scan.py).
+    max_retries:
+        Re-dispatch budget per parallel task for transient failures (a
+        dead worker process, an injected ChaosError, a straggler
+        duplicate); see search_pool's failure semantics.  Irrelevant on
+        the serial path.
+    task_deadline_s:
+        Per-task wall-clock deadline enabling speculative straggler
+        re-dispatch in the pool (``None`` disables).  Wall-clock only.
+    resume_dir:
+        Directory for the task-granular completion journal: completed
+        sub-space tasks are committed there and skipped on re-run, so a
+        killed/preempted search resumes losing at most the in-flight
+        tasks.  Setting it forces the pooled path (even at
+        ``workers=1``) so journaling is always task-granular; the
+        resumed result is byte-identical to an uninterrupted run.
+    guard:
+        A :class:`repro.runtime.fault_tolerance.PreemptionGuard` the
+        pool polls for clean SIGTERM drain
+        (:class:`repro.core.search_pool.SearchPreempted`).
 
     Returns a :class:`SearchResult` whose ``best`` Candidate is
     materialized through the direct oracle, so it is exactly what the
     seed implementation produced for the same graph.
     """
-    if workers is None or workers > 1:
+    if workers is None or workers > 1 or resume_dir is not None:
         from repro.core.search_pool import ParallelSearchDriver
-        with ParallelSearchDriver(workers=workers) as driver:
+        with ParallelSearchDriver(workers=workers,
+                                  max_retries=max_retries,
+                                  task_deadline_s=task_deadline_s,
+                                  guard=guard) as driver:
             return driver.search(gg, hw, objective=objective,
                                  exhaustive_limit=exhaustive_limit,
-                                 batch_size=batch_size, replay=replay)
+                                 batch_size=batch_size, replay=replay,
+                                 resume_dir=resume_dir)
 
     blocks = split_blocks(gg)
     runs = monotone_runs(blocks)

@@ -1,4 +1,4 @@
-"""Parallel cut-space search pool (ROADMAP: parallel candidate evaluation).
+"""Parallel cut-space search pool with a fault-tolerant runtime.
 
 The cut-point optimizer's exhaustive path walks the cross-product of cut
 positions, one per monotone run (see cutpoint.py).  PR 1 made a single
@@ -47,21 +47,73 @@ The pool is generic: :meth:`ParallelSearchDriver.map` exposes it for any
 embarrassingly-parallel loop (``benchmarks/residency_lm.py`` uses it for
 per-arch/per-shape residency planning).
 
-Failure semantics: an exception raised inside a worker (e.g. an invalid
-``objective``) propagates to the caller unchanged, exactly as the serial
-path would raise it; a worker process that dies outright surfaces as a
-``RuntimeError`` naming the crashed pool rather than a hang.
+Failure semantics (the fault-tolerant runtime)
+----------------------------------------------
+
+Task results are pure functions of ``(token, sub-space)``, which is what
+makes every recovery action below *safe*: re-running a task, racing a
+duplicate against a straggler, or replaying a journaled result can never
+change the deterministic merge.  The dispatch loop distinguishes four
+failure classes:
+
+* **Deterministic worker exceptions** (an invalid ``objective``, a bug)
+  propagate to the caller unchanged, exactly as the serial path would
+  raise them -- retrying a deterministic error would fail identically.
+* **Lost tasks** -- a worker process dying outright (OOM kill, signal,
+  ``os._exit``) breaks the whole ``ProcessPoolExecutor``.  The driver
+  identifies the in-flight tasks (completed results are kept), discards
+  and rebuilds the pool, and re-dispatches only the lost tasks, each with
+  bounded attempts (the ``max_retries`` knob, default 2).  A task that
+  keeps dying exhausts its attempts and raises ``RuntimeError`` -- never
+  a hang, never a silently partial result.  Injected transient failures
+  (:class:`repro.runtime.chaos.ChaosError`, ``transient = True``) are
+  retried under the same bound without killing the pool.
+* **Stragglers / deadlines** -- with ``task_deadline_s`` set, a task
+  running past its deadline (tightened by a task-grain EWMA once enough
+  tasks have completed -- ``StragglerMonitor.straggler_after``) gets one
+  speculative duplicate re-dispatched; first completion wins, and the
+  duplicate always runs the ``"journal"`` replay so a hanging device
+  backend cannot hang its own rescue.
+* **Device-replay degradation** -- a worker whose ``replay="device"``
+  scoring raises falls back to the journal replay *inside the task* and
+  reports a ``device_fallback`` event; results are bit-identical by the
+  replay contract, so degradation is logged, never silent.
+
+Every recovery is surfaced as a :class:`FaultEvent` on
+``SearchResult.events`` (retry / straggler / device_fallback / resume) --
+the result says not just *what* won but *what it survived*.
+
+Checkpointed resume: with ``resume_dir`` set, every completed task's
+result is committed to a :class:`repro.checkpoint.checkpoint.TaskJournal`
+(atomic rename + digest, keyed by a content hash of graph/hw/objective/
+partition), journaled tasks are skipped on the next run with identical
+merged results (including ``evaluated``), and a
+:class:`~repro.runtime.fault_tolerance.PreemptionGuard` wired into the
+driver (the ``guard`` knob) drains in-flight tasks on SIGTERM, journals
+them, and raises :class:`SearchPreempted` -- a preempted compile resumes
+losing at most the tasks that were still in flight.  A corrupt journal
+record raises ``JournalError`` instead of resuming from damaged state.
+
+All failure paths are exercised deterministically by the seeded
+fault-injection harness in ``runtime/chaos.py``
+(tests/test_fault_tolerance.py, ``compile_throughput.py --chaos``).
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 import multiprocessing as mp
 import os
 import pickle
-from concurrent.futures import ProcessPoolExecutor
+import time
+from collections import deque
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from concurrent.futures.process import BrokenProcessPool
+from dataclasses import dataclass
 
 from repro.core import cutpoint as _cp
+from repro.runtime import chaos as _chaos
+from repro.runtime.fault_tolerance import PreemptionGuard, StragglerMonitor
 
 # Sub-space tasks created per worker on the exhaustive path.  More tasks
 # than workers smooths the tail (tasks are equal-sized, but workers may not
@@ -70,87 +122,205 @@ TASKS_PER_WORKER = 8
 
 # Below this many tuples the pool's fixed costs (process startup, one
 # engine build per worker) exceed the search itself; the driver silently
-# runs the serial path, which is bit-identical anyway.
+# runs the serial path, which is bit-identical anyway.  (With
+# ``resume_dir`` set the partitioned path always runs, so even small
+# compiles journal at task granularity.)
 MIN_PARALLEL_SPACE = 4096
+
+# Dispatch-loop poll period: the granularity of preemption checks and
+# deadline/straggler sweeps while waiting on in-flight futures.
+_TICK_S = 0.05
+
+
+class SearchPreempted(RuntimeError):
+    """Raised by the dispatch loop after a clean preemption drain: no new
+    tasks were started, in-flight tasks were awaited and journaled (when a
+    journal is open), and the compile can resume from ``resume_dir``."""
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One recovery action taken by the fault-tolerant dispatch loop,
+    surfaced on ``SearchResult.events`` rather than silently absorbed."""
+
+    kind: str            # "retry" | "straggler" | "device_fallback" |
+    #                      "resume" | "preempted"
+    task: object = None  # task identity (sub-space prefix / descent start)
+    attempt: int = 0
+    detail: str = ""
 
 
 # ---------------------------------------------------------- worker globals
-# One engine per worker process, rebuilt when the search token changes.  A
-# fresh token per `ParallelSearchDriver.search` call keeps the engine's memo
-# in the exact state the serial implementation's fresh engine has, which is
-# what makes `evaluated` (a cache-miss count) reproducible.
-_ENGINE_TOKEN: tuple | None = None
-_ENGINE: "_cp.CutpointEngine | None" = None
+# Engines per worker process, keyed by (search token, replay mode) --
+# rebuilt when the token changes (a fresh token per driver search keeps
+# each engine's memo in the exact state the serial implementation's fresh
+# engine has, which is what makes `evaluated` -- a cache-miss count --
+# reproducible).  The replay key exists because a device-replay task that
+# degrades mid-search needs a *separate* journal-replay engine.
+_ENGINES: dict = {}
 
-# Test hook (tests/test_search_pool.py): set to "raise" / "exit" in the
-# parent before the pool is created; fork-started workers inherit it.
+# Legacy test hook (predates runtime/chaos.py): set to "raise" / "exit" in
+# the parent before the pool is created; fork-started workers inherit it.
+# New code should install a seeded ChaosInjector instead.
 _TEST_FAIL_HOOK: str | None = None
 
 
 def _worker_engine(token: tuple, payload: bytes,
                    replay: str = "journal") -> "_cp.CutpointEngine":
-    global _ENGINE_TOKEN, _ENGINE
-    if token != _ENGINE_TOKEN:
+    key = (token, replay)
+    engine = _ENGINES.get(key)
+    if engine is None:
+        # a new search token invalidates engines of previous searches
+        for old in [k for k in _ENGINES if k[0] != token]:
+            del _ENGINES[old]
         gg, hw = pickle.loads(payload)
-        _ENGINE = _cp.CutpointEngine(gg, hw, replay=replay)
-        _ENGINE_TOKEN = token
-    return _ENGINE
+        engine = _ENGINES[key] = _cp.CutpointEngine(gg, hw, replay=replay)
+    return engine
 
 
-def _maybe_fail() -> None:
+def _maybe_fail(key, attempt: int = 0) -> None:
+    """Worker-side injection site at task start: the legacy string hook
+    plus the seeded chaos injector (site ``"task"``, keyed by the task's
+    identity so faults are scheduling-independent)."""
     if _TEST_FAIL_HOOK == "raise":
         raise RuntimeError("search_pool test hook: simulated worker failure")
     if _TEST_FAIL_HOOK == "exit":          # hard crash, no exception
         os._exit(3)
+    _chaos.maybe_fire("task", key, attempt)
 
 
-def _run_subspace(task) -> tuple["_cp.CandidateMetrics", int]:
-    """Evaluate ``prefix x product(suffix_dims)``; return (argmin, #evals).
+def _run_subspace(task, attempt: int = 0):
+    """Evaluate ``prefix x product(suffix_dims)``.
 
-    Ties keep the first optimum in product order, as serial search does.
+    Returns ``(argmin CandidateMetrics, #evals, worker events)``.  Ties
+    keep the first optimum in product order, as serial search does.
     ``batch_size > 1`` walks the sub-space in ``score_batch`` chunks (the
     production path); the argmin and the evaluation count are identical
-    either way.
+    either way.  A failing device replay degrades to the journal replay
+    in-task (bit-identical by contract) and reports a ``device_fallback``
+    event instead of failing the task.
     """
     token, payload, prefix, suffix_dims, objective, batch_size, replay = task
-    _maybe_fail()
-    engine = _worker_engine(token, payload, replay)
-    before = engine.evaluations
-    best = None
-    tuples = (prefix + suffix for suffix in
-              itertools.product(*[range(d + 1) for d in suffix_dims]))
-    if batch_size > 1:
-        while True:
-            chunk = list(itertools.islice(tuples, batch_size))
-            if not chunk:
-                break
-            for c in engine.score_batch(chunk, memoize=False):
+    _maybe_fail(prefix, attempt)
+
+    def score(engine):
+        before = engine.evaluations
+        best = None
+        tuples = (prefix + suffix for suffix in
+                  itertools.product(*[range(d + 1) for d in suffix_dims]))
+        if batch_size > 1:
+            while True:
+                chunk = list(itertools.islice(tuples, batch_size))
+                if not chunk:
+                    break
+                for c in engine.score_batch(chunk, memoize=False):
+                    if best is None or (_cp._key(c, objective)
+                                        < _cp._key(best, objective)):
+                        best = c
+        else:
+            for cuts in tuples:
+                c = engine.evaluate(cuts, memoize=False)
                 if best is None or (_cp._key(c, objective)
                                     < _cp._key(best, objective)):
                     best = c
-    else:
-        for cuts in tuples:
-            c = engine.evaluate(cuts, memoize=False)
-            if best is None or (_cp._key(c, objective)
-                                < _cp._key(best, objective)):
-                best = c
-    return best, engine.evaluations - before
+        return best, engine.evaluations - before
+
+    events: tuple = ()
+    try:
+        engine = _worker_engine(token, payload, replay)
+        if replay == "device":
+            # chaos site for injected backend failures (tests/benchmarks)
+            _chaos.maybe_fire("device", prefix, attempt)
+        best, n = score(engine)
+    except Exception as e:
+        if replay != "device":
+            raise
+        # device backend raised: degrade to the journal replay -- logged,
+        # never silent, and bit-identical by the replay contract
+        engine = _worker_engine(token, payload, "journal")
+        best, n = score(engine)
+        events = (("device_fallback", f"device replay failed ({e!r}); "
+                   f"journal replay substituted"),)
+    return best, n, events
 
 
-def _run_descent(task) -> tuple["_cp.CandidateMetrics", frozenset]:
-    """One coordinate-descent start; returns (final point, visited tuples).
+def _run_descent(task, attempt: int = 0):
+    """One coordinate-descent start.
 
-    Runs ``cutpoint.coordinate_descent`` itself -- the one definition of
-    the descent trajectory -- so the returned point is the one the serial
-    loop reaches from this start, by construction.
+    Returns ``(final CandidateMetrics, visited frozenset, worker
+    events)``.  Runs ``cutpoint.coordinate_descent`` itself -- the one
+    definition of the descent trajectory -- so the returned point is the
+    one the serial loop reaches from this start, by construction.  Device
+    replay degradation mirrors ``_run_subspace``.
     """
     token, payload, start, objective, batch_size, replay = task
-    _maybe_fail()
-    engine = _worker_engine(token, payload, replay)
-    visited: set[tuple[int, ...]] = set()
-    cur = _cp.coordinate_descent(engine, start, objective,
-                                 on_eval=visited.add, batch_size=batch_size)
-    return cur, frozenset(visited)
+    _maybe_fail(start, attempt)
+
+    def run(engine):
+        visited: set[tuple[int, ...]] = set()
+        cur = _cp.coordinate_descent(engine, start, objective,
+                                     on_eval=visited.add,
+                                     batch_size=batch_size)
+        return cur, frozenset(visited)
+
+    events: tuple = ()
+    try:
+        engine = _worker_engine(token, payload, replay)
+        if replay == "device":
+            _chaos.maybe_fire("device", start, attempt)
+        cur, visited = run(engine)
+    except Exception as e:
+        if replay != "device":
+            raise
+        engine = _worker_engine(token, payload, "journal")
+        cur, visited = run(engine)
+        events = (("device_fallback", f"device replay failed ({e!r}); "
+                   f"journal replay substituted"),)
+    return cur, visited, events
+
+
+def _degrade_subspace(task):
+    """Straggler duplicates always run the journal replay: if the device
+    backend is what's hanging, the rescue must not hang with it."""
+    return task[:6] + ("journal",)
+
+
+def _degrade_descent(task):
+    return task[:5] + ("journal",)
+
+
+# ----------------------------------------------------- journal record codec
+def _encode_subspace(result) -> dict:
+    m, n, _events = result
+    return {"cuts": list(m.cuts), "lat": m.latency_cycles,
+            "dram_total": m.dram_total, "dram_fm": m.dram_fm,
+            "sram": m.sram_total, "bram": m.bram18k,
+            "feasible": bool(m.feasible), "evals": n}
+
+
+def _decode_metrics(rec: dict) -> "_cp.CandidateMetrics":
+    return _cp.CandidateMetrics(
+        cuts=tuple(rec["cuts"]), latency_cycles=rec["lat"],
+        dram_total=rec["dram_total"], dram_fm=rec["dram_fm"],
+        sram_total=rec["sram"], bram18k=rec["bram"],
+        feasible=rec["feasible"])
+
+
+def _decode_subspace(rec: dict):
+    return _decode_metrics(rec), rec["evals"], ()
+
+
+def _encode_descent(result) -> dict:
+    m, visited, _events = result
+    rec = _encode_subspace((m, 0, ()))
+    del rec["evals"]
+    rec["visited"] = sorted(list(t) for t in visited)
+    return rec
+
+
+def _decode_descent(rec: dict):
+    visited = frozenset(tuple(t) for t in rec["visited"])
+    return _decode_metrics(rec), visited, ()
 
 
 def partition_space(runs: list[list[int]],
@@ -186,6 +356,25 @@ class ParallelSearchDriver:
         ``multiprocessing`` start method.  Default: ``"fork"`` where
         available (workers inherit the parent's imports, so startup is
         milliseconds), else the platform default.
+    max_retries:
+        Re-dispatch budget per task for *transient* failures (a dead
+        worker process breaking the pool, an injected ``ChaosError``, a
+        straggler duplicate).  A task still failing after
+        ``max_retries`` re-dispatches raises ``RuntimeError``.
+        Deterministic worker exceptions are never retried.
+    task_deadline_s:
+        Per-task wall-clock deadline.  A task running past it (or past
+        the task-grain EWMA straggler bound once warmed, whichever is
+        sooner) gets one speculative duplicate; first completion wins.
+        ``None`` (default) disables deadlines and speculation.
+    guard:
+        A :class:`~repro.runtime.fault_tolerance.PreemptionGuard` to poll
+        in the dispatch loop; when it trips (SIGTERM/SIGINT), the driver
+        drains in-flight tasks, journals them (under ``resume_dir``) and
+        raises :class:`SearchPreempted`.
+    straggler_threshold:
+        EWMA multiple beyond which an in-flight task counts as a
+        straggler (only with ``task_deadline_s`` set).
 
     The pool is created lazily on first use and reused across calls; use
     the driver as a context manager (or call :meth:`close`) to reap the
@@ -193,13 +382,21 @@ class ParallelSearchDriver:
     """
 
     def __init__(self, workers: int | None = None,
-                 mp_context: str | None = None):
+                 mp_context: str | None = None,
+                 max_retries: int = 2,
+                 task_deadline_s: float | None = None,
+                 guard: "PreemptionGuard | None" = None,
+                 straggler_threshold: float = 4.0):
         self.workers = max(1, workers or os.cpu_count() or 1)
         if mp_context is None and "fork" in mp.get_all_start_methods():
             mp_context = "fork"
         self._ctx = mp.get_context(mp_context) if mp_context else None
         self._pool: ProcessPoolExecutor | None = None
         self._searches = 0
+        self.max_retries = max(0, max_retries)
+        self.task_deadline_s = task_deadline_s
+        self.guard = guard
+        self.straggler_threshold = straggler_threshold
 
     # ------------------------------------------------------------- plumbing
     def _executor(self) -> ProcessPoolExecutor:
@@ -213,7 +410,10 @@ class ParallelSearchDriver:
 
         ``fn`` must be a module-level callable; results come back in input
         order.  Worker exceptions propagate; a dead worker process raises
-        ``RuntimeError`` instead of hanging the caller.
+        ``RuntimeError`` instead of hanging the caller.  ``map`` does NOT
+        retry -- generic callables are not known to be pure; the retrying
+        dispatch loop is reserved for the search task functions, whose
+        purity makes re-execution safe.
         """
         try:
             return list(self._executor().map(fn, items, chunksize=chunksize))
@@ -239,12 +439,190 @@ class ParallelSearchDriver:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    # ------------------------------------------------- fault-tolerant loop
+    def _open_journal(self, resume_dir, payload: bytes, objective: str,
+                      mode: str, parts):
+        """A TaskJournal keyed by the content hash of (graph+hw payload,
+        objective, partition) -- resuming is only legal when every one of
+        those matches; purely wall-clock knobs (batch_size, replay,
+        worker count at fixed partition) are deliberately excluded, since
+        results are bit-identical across them."""
+        # lazy: checkpoint.py pulls in jax/msgpack, which plain searches
+        # never need
+        from repro.checkpoint.checkpoint import TaskJournal
+        h = hashlib.sha256()
+        h.update(payload)
+        h.update(repr((objective, mode, parts)).encode())
+        return TaskJournal(resume_dir, h.hexdigest()[:16])
+
+    def _run_tasks(self, fn, tasks: list, keys: list, events: list,
+                   journal=None, encode=None, decode=None, degrade=None):
+        """Dispatch ``tasks`` with retry, healing, deadlines, journaling
+        and preemption drain; returns worker results in task order.
+
+        Correctness rests on task purity: ``fn(tasks[i])`` always returns
+        the same value, so journal replays, bounded re-dispatch after a
+        pool break, and first-completion-wins duplicate racing all merge
+        to the same result as a fault-free run.
+        """
+        n = len(tasks)
+        results: dict[int, object] = {}
+        task_keys = None
+        if journal is not None:
+            task_keys = [journal.task_key(k) for k in keys]
+            for i in range(n):
+                rec = journal.get(task_keys[i])     # may raise JournalError
+                if rec is not None:
+                    results[i] = decode(rec)
+                    events.append(FaultEvent(
+                        "resume", task=keys[i],
+                        detail="journaled task result reused"))
+        if len(results) == n:
+            return [results[i] for i in range(n)]
+
+        live = {i: tasks[i] for i in range(n)}   # may be degraded on retry
+        attempts = [0] * n
+        dup_issued = [False] * n
+        pending = deque(i for i in range(n) if i not in results)
+        inflight: dict = {}                  # future -> (i, t0, attempt)
+        monitor = StragglerMonitor(window=64,
+                                   threshold=self.straggler_threshold,
+                                   min_samples=5)
+        # cap in-flight submissions: a pool break then only blames the
+        # tasks actually handed to the broken pool, and preemption drains
+        # quickly
+        window = max(1, 2 * self.workers)
+
+        def submit(i: int) -> None:
+            try:
+                fut = self._executor().submit(fn, live[i], attempts[i])
+            except BrokenProcessPool:        # broke between loop ticks
+                self._reset()
+                fut = self._executor().submit(fn, live[i], attempts[i])
+            inflight[fut] = (i, time.monotonic(), attempts[i])
+
+        def fill() -> None:
+            while pending and len(inflight) < window:
+                i = pending.popleft()
+                if i not in results:
+                    submit(i)
+
+        def record(i: int, res, wall: float | None) -> None:
+            results[i] = res
+            if wall is not None:
+                monitor.observe(wall)
+            if journal is not None:
+                journal.put(task_keys[i], encode(res))
+
+        def retry(i: int, exc, reason: str) -> None:
+            if attempts[i] >= self.max_retries:
+                raise RuntimeError(
+                    f"search-pool task {keys[i]!r} failed after "
+                    f"{attempts[i] + 1} attempts ({reason}; workers="
+                    f"{self.workers}, max_retries={self.max_retries})"
+                ) from exc
+            attempts[i] += 1
+            pending.append(i)
+            events.append(FaultEvent("retry", task=keys[i],
+                                     attempt=attempts[i], detail=reason))
+
+        fill()
+        while len(results) < n:
+            if self.guard is not None and self.guard.preempted:
+                self._drain(inflight, results, keys, task_keys, journal,
+                            encode, monitor, events)
+                raise SearchPreempted(
+                    f"search preempted: {len(results)}/{n} tasks complete"
+                    + (" and journaled" if journal is not None else "")
+                    + f"; resume to finish the remaining "
+                      f"{n - len(results)}")
+            done, _ = wait(list(inflight), timeout=_TICK_S,
+                           return_when=FIRST_COMPLETED)
+            broken = False
+            for fut in done:
+                i, t0, _att = inflight.pop(fut)
+                exc = fut.exception()
+                if exc is None:
+                    if i not in results:     # duplicates: first one wins
+                        record(i, fut.result(), time.monotonic() - t0)
+                    continue
+                if isinstance(exc, BrokenProcessPool):
+                    broken = True
+                    if i not in results:
+                        retry(i, exc, "worker process died")
+                    continue
+                if i in results:
+                    continue                 # losing duplicate failed
+                if getattr(exc, "transient", False):
+                    retry(i, exc, f"transient worker failure: {exc}")
+                else:
+                    raise exc       # deterministic error: as serial would
+            if broken:
+                # the pool takes every other in-flight future down with it
+                for fut in list(inflight):
+                    i, t0, _att = inflight.pop(fut)
+                    if i not in results:
+                        retry(i, None, "worker process died")
+                self._reset()
+            self._check_deadlines(inflight, results, attempts, dup_issued,
+                                  live, keys, degrade, monitor, events,
+                                  submit)
+            fill()
+        return [results[i] for i in range(n)]
+
+    def _check_deadlines(self, inflight, results, attempts, dup_issued,
+                         live, keys, degrade, monitor, events,
+                         submit) -> None:
+        """Speculative straggler re-dispatch: one duplicate per task once
+        it outlives min(task_deadline_s, EWMA straggler bound)."""
+        if self.task_deadline_s is None:
+            return
+        deadline = self.task_deadline_s
+        ewma_bound = monitor.straggler_after()
+        if ewma_bound is not None:
+            deadline = min(deadline, ewma_bound)
+        now = time.monotonic()
+        for fut, (i, t0, _att) in list(inflight.items()):
+            if (i in results or dup_issued[i] or now - t0 <= deadline
+                    or attempts[i] >= self.max_retries):
+                continue
+            attempts[i] += 1
+            dup_issued[i] = True
+            if degrade is not None:
+                live[i] = degrade(live[i])
+            submit(i)
+            events.append(FaultEvent(
+                "straggler", task=keys[i], attempt=attempts[i],
+                detail=f"duplicate dispatched after {now - t0:.2f}s > "
+                       f"{deadline:.2f}s deadline"))
+
+    def _drain(self, inflight, results, keys, task_keys, journal, encode,
+               monitor, events) -> None:
+        """Clean preemption drain: start nothing new, cancel what hasn't
+        started, await what has, journal every completed result."""
+        for fut in list(inflight):
+            fut.cancel()                       # queued-only futures
+        if inflight:
+            done, _ = wait(list(inflight))
+            for fut in done:
+                i, t0, _att = inflight.pop(fut)
+                if (i in results or fut.cancelled()
+                        or fut.exception() is not None):
+                    continue
+                results[i] = fut.result()
+                if journal is not None:
+                    journal.put(task_keys[i], encode(fut.result()))
+        events.append(FaultEvent(
+            "preempted",
+            detail=f"preemption drain: {len(results)} task results kept"))
+
     # --------------------------------------------------------------- search
     def search(self, gg, hw, objective: str = "latency",
                exhaustive_limit: int | None = None,
                min_parallel_space: int = MIN_PARALLEL_SPACE,
                batch_size: int | None = None,
-               replay: str = "journal"):
+               replay: str = "journal",
+               resume_dir=None):
         """Parallel ``cutpoint.search``, bit-identical to the serial result.
 
         Same knobs as :func:`repro.core.cutpoint.search` (including
@@ -254,7 +632,9 @@ class ParallelSearchDriver:
         inside each worker's engine); additionally ``min_parallel_space``
         sets the space size below which the serial path runs directly
         (the result is identical either way -- this is purely a
-        fixed-cost cutoff).
+        fixed-cost cutoff), and ``resume_dir`` opens the task journal for
+        checkpointed resume (which also forces the partitioned path, so
+        every task is journaled even on small spaces).
         """
         if exhaustive_limit is None:
             exhaustive_limit = _cp.EXHAUSTIVE_LIMIT
@@ -266,40 +646,91 @@ class ParallelSearchDriver:
         for r in runs:
             space *= len(r) + 1
         exhaustive = space <= exhaustive_limit
-        if (self.workers <= 1 or not runs
-                or (exhaustive and space < min_parallel_space)):
+        serial_ok = (self.workers <= 1 or not runs
+                     or (exhaustive and space < min_parallel_space))
+        if not runs or (serial_ok and resume_dir is None):
             return _cp.search(gg, hw, objective=objective,
                               exhaustive_limit=exhaustive_limit,
                               batch_size=batch_size, replay=replay)
 
-        self._searches += 1
-        token = (os.getpid(), id(self), self._searches, replay)
-        payload = pickle.dumps((gg, hw), protocol=pickle.HIGHEST_PROTOCOL)
-
         if exhaustive:
             prefixes, suffix_dims = partition_space(
                 runs, self.workers * TASKS_PER_WORKER)
-            tasks = [(token, payload, p, suffix_dims, objective, batch_size,
-                      replay) for p in prefixes]
-            results = self.map(_run_subspace, tasks)
-            evaluated = sum(n for _, n in results)
-            # (objective key, cut tuple) == first optimum in product order.
-            best = min((m for m, _ in results),
-                       key=lambda m: (_cp._key(m, objective), m.cuts))
-        else:
-            starts = _cp.descent_starts(blocks, runs)
-            tasks = [(token, payload, s, objective, batch_size, replay)
-                     for s in starts]
-            results = self.map(_run_descent, tasks)
-            visited: set = set()
-            best = None
-            for m, seen in results:             # start order; strict < as
-                visited |= seen                 # the serial loop over starts
-                if best is None or (_cp._key(m, objective)
-                                    < _cp._key(best, objective)):
-                    best = m
-            evaluated = len(visited)
+            return self.run_subspaces(
+                gg, hw, prefixes, suffix_dims, objective=objective,
+                batch_size=batch_size, replay=replay,
+                resume_dir=resume_dir, blocks=blocks, runs=runs)
 
+        starts = _cp.descent_starts(blocks, runs)
+        self._searches += 1
+        token = (os.getpid(), id(self), self._searches, replay)
+        payload = pickle.dumps((gg, hw), protocol=pickle.HIGHEST_PROTOCOL)
+        events: list[FaultEvent] = []
+        journal = None
+        if resume_dir is not None:
+            journal = self._open_journal(resume_dir, payload, objective,
+                                         "descent", tuple(starts))
+        tasks = [(token, payload, s, objective, batch_size, replay)
+                 for s in starts]
+        results = self._run_tasks(
+            _run_descent, tasks, keys=starts, events=events,
+            journal=journal, encode=_encode_descent,
+            decode=_decode_descent, degrade=_degrade_descent)
+        visited: set = set()
+        best = None
+        for start, (m, seen, wev) in zip(starts, results):
+            for kind, detail in wev:
+                events.append(FaultEvent(kind, task=start, detail=detail))
+            visited |= seen                 # start order; strict < as
+            if best is None or (_cp._key(m, objective)
+                                < _cp._key(best, objective)):
+                best = m                    # the serial loop over starts
+        cand = _cp.evaluate(gg, blocks, runs, best.cuts, hw)
+        return _cp.SearchResult(best=cand, evaluated=len(visited),
+                                runs=runs, blocks=blocks, events=events)
+
+    def run_subspaces(self, gg, hw, prefixes, suffix_dims,
+                      objective: str = "latency",
+                      batch_size: int | None = None,
+                      replay: str = "journal",
+                      resume_dir=None, blocks=None, runs=None):
+        """Fault-tolerant exhaustive search over an explicit partition.
+
+        ``search`` delegates the full-space exhaustive path here;
+        benchmarks call it directly with a *slice* of the partition
+        (e.g. the first N yolov2 prefixes) to run end-to-end through the
+        retry/journal/deadline machinery on a bounded budget.  Returns a
+        ``SearchResult`` over exactly the given sub-spaces.
+        """
+        if batch_size is None:
+            batch_size = _cp.DEFAULT_BATCH_SIZE
+        if blocks is None:
+            blocks = _cp.split_blocks(gg)
+        if runs is None:
+            runs = _cp.monotone_runs(blocks)
+        self._searches += 1
+        token = (os.getpid(), id(self), self._searches, replay)
+        payload = pickle.dumps((gg, hw), protocol=pickle.HIGHEST_PROTOCOL)
+        events: list[FaultEvent] = []
+        journal = None
+        if resume_dir is not None:
+            journal = self._open_journal(
+                resume_dir, payload, objective, "exhaustive",
+                (tuple(suffix_dims), tuple(prefixes)))
+        tasks = [(token, payload, p, tuple(suffix_dims), objective,
+                  batch_size, replay) for p in prefixes]
+        results = self._run_tasks(
+            _run_subspace, tasks, keys=list(prefixes), events=events,
+            journal=journal, encode=_encode_subspace,
+            decode=_decode_subspace, degrade=_degrade_subspace)
+        evaluated = 0
+        for prefix, (_m, nev, wev) in zip(prefixes, results):
+            evaluated += nev
+            for kind, detail in wev:
+                events.append(FaultEvent(kind, task=prefix, detail=detail))
+        # (objective key, cut tuple) == first optimum in product order.
+        best = min((m for m, _n, _e in results),
+                   key=lambda m: (_cp._key(m, objective), m.cuts))
         cand = _cp.evaluate(gg, blocks, runs, best.cuts, hw)
         return _cp.SearchResult(best=cand, evaluated=evaluated,
-                                runs=runs, blocks=blocks)
+                                runs=runs, blocks=blocks, events=events)

@@ -4,16 +4,23 @@ mitigation hooks.
 Designed for 1000+ node fleets where *something* is always failing:
   * PreemptionGuard -- SIGTERM/SIGINT flips a flag; the train loop
     checkpoints at the next step boundary and exits cleanly (atomic commit
-    is checkpoint/checkpoint.py's job).
+    is checkpoint/checkpoint.py's job).  The compiler's search pool uses
+    the same guard for clean drain of in-flight sub-space tasks
+    (core/search_pool.py): completed tasks are journaled, the pool stops
+    dispatching, and the compile resumes from the task journal.
   * resume_or_init -- restart-from-latest: restores params/opt/data-step
     from the newest COMMITTED checkpoint, fast-forwards the deterministic
     data pipeline, and re-shards onto the *current* mesh (elastic: a
     restarted job may come back with a different pod count).
-  * StragglerMonitor -- per-step wall-time EWMA; steps slower than
-    `threshold x` median flag the host; the documented mitigation at scale
-    is (1) hot-spare replacement via elastic restore, (2) within-job, the
-    synchronous collectives make per-host skipping unsound, so mitigation
-    is node replacement, not step skipping.
+  * StragglerMonitor -- per-step wall-time statistics at two grains: the
+    windowed median (train-loop steps: steps slower than `threshold x`
+    median flag the host) and an EWMA (`observe`/`straggler_after`), which
+    the search pool uses at *task* grain to derive speculative re-dispatch
+    deadlines.  The documented mitigation at scale is (1) hot-spare
+    replacement via elastic restore, (2) within-job, the synchronous
+    collectives make per-host skipping unsound, so mitigation is node
+    replacement, not step skipping -- except for the search pool's pure
+    tasks, where duplicating a straggler is always sound.
 """
 from __future__ import annotations
 
@@ -22,23 +29,46 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 
-from repro.checkpoint.checkpoint import latest_step, restore
-
 
 class PreemptionGuard:
+    """Latches SIGTERM/SIGINT into a ``preempted`` flag.
+
+    ``install()`` saves the previous handlers so ``uninstall()`` can put
+    them back -- a guard created for one search/train loop must not leak
+    into test processes or forked pool workers for the rest of their
+    lives.  Usable as a context manager for exactly that pairing.
+    """
+
     def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
         self._requested = False
         self._installed = False
         self._signals = signals
+        self._previous: dict = {}
 
     def install(self) -> "PreemptionGuard":
         for s in self._signals:
             try:
-                signal.signal(s, self._handler)
+                self._previous[s] = signal.signal(s, self._handler)
             except ValueError:
                 pass                        # non-main thread (tests)
         self._installed = True
         return self
+
+    def uninstall(self) -> None:
+        """Restore the signal handlers ``install()`` displaced."""
+        for s, prev in self._previous.items():
+            try:
+                signal.signal(s, prev)
+            except ValueError:
+                pass                        # non-main thread (tests)
+        self._previous.clear()
+        self._installed = False
+
+    def __enter__(self) -> "PreemptionGuard":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
 
     def _handler(self, signum, frame):
         self._requested = True
@@ -56,6 +86,10 @@ def resume_or_init(ckpt_dir, abstract_state, shardings, init_fn,
     """Returns (state, start_step).  `abstract_state` is the eval_shape of
     the full train state; `init_fn()` builds it fresh when no checkpoint
     exists."""
+    # lazy: checkpoint.py pulls in jax/msgpack, which PreemptionGuard and
+    # StragglerMonitor users (e.g. the compiler's search pool) don't need
+    from repro.checkpoint.checkpoint import latest_step, restore
+
     step = latest_step(ckpt_dir)
     if step is None:
         return init_fn(), 0
@@ -67,19 +101,48 @@ def resume_or_init(ckpt_dir, abstract_state, shardings, init_fn,
 
 @dataclass
 class StragglerMonitor:
+    """Wall-time statistics with two consumers:
+
+    * train loops call ``step_start``/``step_end`` and get the windowed
+      median-based straggler flag (``threshold x`` median);
+    * the search pool calls ``observe(dt)`` per completed task and
+      ``straggler_after()`` for an EWMA-based speculative-dispatch
+      deadline (None until ``min_samples`` tasks have been observed).
+    """
+
     window: int = 50
     threshold: float = 2.0
-    times: deque = field(default_factory=lambda: deque(maxlen=256))
+    alpha: float = 0.2            # EWMA smoothing factor for task grain
+    min_samples: int = 5          # EWMA warm-up before deadlines are drawn
+    times: deque = field(default_factory=deque)
     flagged_steps: list = field(default_factory=list)
     _t0: float | None = None
+    _ewma: float | None = None
+    _observed: int = 0
+
+    def __post_init__(self):
+        # honor the window field: the deque really is the window
+        self.times = deque(self.times, maxlen=self.window)
+
+    def observe(self, dt: float) -> None:
+        """Record one duration (a step or a task wall time)."""
+        self.times.append(dt)
+        self._observed += 1
+        self._ewma = dt if self._ewma is None \
+            else self.alpha * dt + (1 - self.alpha) * self._ewma
 
     def step_start(self) -> None:
         self._t0 = time.monotonic()
 
     def step_end(self, step: int) -> bool:
-        """Returns True if this step was a straggler."""
+        """Returns True if this step was a straggler.  A ``step_end``
+        without a matching ``step_start`` records nothing and returns
+        False (it used to crash with TypeError on ``None`` arithmetic)."""
+        if self._t0 is None:
+            return False
         dt = time.monotonic() - self._t0
-        self.times.append(dt)
+        self._t0 = None
+        self.observe(dt)
         if len(self.times) < 10:
             return False
         med = sorted(self.times)[len(self.times) // 2]
@@ -87,6 +150,13 @@ class StragglerMonitor:
             self.flagged_steps.append((step, dt, med))
             return True
         return False
+
+    def straggler_after(self) -> float | None:
+        """Duration beyond which a task counts as a straggler (EWMA x
+        threshold), or None while the EWMA is still warming up."""
+        if self._observed < self.min_samples or self._ewma is None:
+            return None
+        return self.threshold * self._ewma
 
     @property
     def median_s(self) -> float:
