@@ -1,0 +1,32 @@
+"""Static verification of compiled ExecutionPlans (see ``verifier``).
+
+Public surface:
+
+* :func:`verify_plan` / :func:`verify_execution_plan` -- run every static
+  check over a plan, returning typed :class:`Diagnostic` findings;
+* :class:`Diagnostic` / :class:`Severity` / :data:`CODES` /
+  :class:`VerificationError` -- the diagnostic vocabulary;
+* :func:`journal_trace` -- per-buffer live intervals from the allocator
+  journal replay;
+* :mod:`repro.analysis.mutate` -- the seeded mutation fuzzer proving the
+  verifier's coverage;
+* ``python -m repro.analysis`` -- the CLI (verify zoo plans, run the
+  mutation-kill gate, write reports).
+"""
+from repro.analysis.diagnostics import (CODES, Diagnostic, Severity,
+                                        VerificationError, render_report)
+from repro.analysis.liveness import (BufferInterval, JournalTrace,
+                                     journal_trace, render_intervals)
+from repro.analysis.mutate import (CLASSES, Mutant, kill_matrix,
+                                   mutate_plan, render_kill_matrix,
+                                   simulator_detects)
+from repro.analysis.verifier import (errors_of, verify_execution_plan,
+                                     verify_plan)
+
+__all__ = [
+    "CODES", "Diagnostic", "Severity", "VerificationError",
+    "render_report", "BufferInterval", "JournalTrace", "journal_trace",
+    "render_intervals", "CLASSES", "Mutant", "kill_matrix", "mutate_plan",
+    "render_kill_matrix", "simulator_detects", "errors_of",
+    "verify_execution_plan", "verify_plan",
+]

@@ -332,6 +332,29 @@ def allocate(gg: GroupedGraph, policy: Policy) -> Allocation:
     return state.alloc
 
 
+def iter_alloc_states(gg: GroupedGraph, policy: Policy):
+    """Journal export: replay Algorithm 1 under ``policy`` and yield
+    ``(step, state)`` after every ``alloc_step``.
+
+    The yielded ``AllocState`` is the live (mutating) replay state, not a
+    snapshot -- callers that only *observe* per-step facts (buffer
+    ownership transitions, boundary-journal additions) read what they need
+    before advancing.  This is what the static verifier
+    (``repro.analysis.liveness``) derives per-buffer live intervals from:
+    ``live_in_buffer`` transitions between consecutive yields are exactly
+    the buffer claim/release events of the allocator's journal, and the
+    ``j_writes``/``j_reads``/``j_spills`` journals carry the boundary-set
+    additions of the step just executed (drained per yield)."""
+    state = init_alloc_state(gg)
+    state.alloc.policy = dict(policy)
+    for step in graph_steps(gg):
+        state.j_writes.clear()
+        state.j_reads.clear()
+        state.j_spills.clear()
+        alloc_step(state, step, policy[step.gid])
+        yield step, state
+
+
 # --------------------------------------------------- state tensorization
 # ``AllocState`` is a handful of Python containers; the scan-style device
 # replay needs the same information as fixed-width integer arrays (one

@@ -24,7 +24,8 @@ tests/benchmarks audit the plan against the functional simulator
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 
 from repro.core.allocator import Allocation, allocate, frame_feasible
 from repro.core.cutpoint import (DEFAULT_BATCH_SIZE, EXHAUSTIVE_LIMIT,
@@ -51,6 +52,9 @@ class ExecutionPlan:
     latency: LatencyReport
     instructions: list[GroupInstruction]
     search: SearchResult | None = None
+    # static-verifier findings (empty when verify="off" or the plan is
+    # clean); see repro.analysis
+    diagnostics: list = field(default_factory=list)
 
     # ------------------------------------------------------------- metrics
     @property
@@ -96,7 +100,8 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
                   max_retries: int = 2,
                   task_deadline_s: float | None = None,
                   resume_dir=None,
-                  guard=None) -> ExecutionPlan:
+                  guard=None,
+                  verify: str = "off") -> ExecutionPlan:
     """Compile a CNN graph into an :class:`ExecutionPlan`.
 
     ``objective``, ``exhaustive_limit``, ``workers``, ``batch_size`` and
@@ -125,7 +130,17 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
     skipped and the policy is compiled verbatim -- this is how the all-row
     baseline and ablation plans are built; feasibility is still computed
     honestly for the resulting Candidate.
+
+    ``verify`` runs the static plan verifier (``repro.analysis``) over the
+    finished plan: ``"off"`` (default) skips it, ``"warn"`` records the
+    diagnostics on ``plan.diagnostics`` and emits a ``UserWarning`` per
+    error-severity finding, ``"strict"`` raises
+    ``repro.analysis.VerificationError`` if any error-severity diagnostic
+    is found.  A clean compile leaves ``plan.diagnostics`` empty.
     """
+    if verify not in ("off", "warn", "strict"):
+        raise ValueError(f"verify={verify!r}: expected 'off', 'warn' or "
+                         f"'strict'")
     graph.validate()
     gg = group_nodes(graph)
     result: SearchResult | None = None
@@ -152,11 +167,23 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
             dram_total=dram.total, dram_fm=dram.fm_bytes,
             sram_total=sram.sram_total, bram18k=sram.bram18k,
             feasible=feasible)
-    return ExecutionPlan(
+    plan = ExecutionPlan(
         graph=graph, grouped=gg, hw=hw, candidate=cand, alloc=alloc,
         sram=sram, dram=dram, latency=latency,
         instructions=generate_instructions(gg, alloc),
         search=result)
+    if verify != "off":
+        # Imported lazily: analysis depends on core, not the reverse.
+        from repro.analysis import (VerificationError, errors_of,
+                                    verify_execution_plan)
+        plan.diagnostics = verify_execution_plan(plan)
+        errors = errors_of(plan.diagnostics)
+        if errors and verify == "strict":
+            raise VerificationError(graph.name, plan.diagnostics)
+        for d in errors:
+            warnings.warn(f"compile_graph({graph.name}): {d.render()}",
+                          stacklevel=2)
+    return plan
 
 
 def all_row_policy(gg: GroupedGraph) -> dict[int, str]:

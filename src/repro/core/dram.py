@@ -51,7 +51,7 @@ def row_fm_bytes(gg: GroupedGraph, g: Group) -> int:
         # top (it used to be, double-counting the second operand -- the
         # memory simulator counts 2 reads + 1 write, tests/
         # test_simulator_audit.py keeps the two in lock-step).
-        fm += sum(gg.groups[i].out_size
+        fm += sum(gg.groups[i].out_size        # det: int-exact byte counts
                   for i in gg.group_inputs(g)[1:]
                   if i >= 0)
     else:
@@ -81,7 +81,8 @@ def dram_fm(gg: GroupedGraph, alloc: Allocation) -> int:
 
 
 def dram_report(gg: GroupedGraph, alloc: Allocation) -> DRAMReport:
-    weights = sum(g.weight_size for g in gg.groups)   # read exactly once
+    # det: int-exact byte counts (read exactly once)
+    weights = sum(g.weight_size for g in gg.groups)
     return DRAMReport(fm_bytes=dram_fm(gg, alloc), weight_bytes=weights)
 
 
@@ -107,6 +108,7 @@ def dram_tables(gg: GroupedGraph) -> DRAMTables:
         else:
             row_fm[g.gid] = row_fm_bytes(gg, g)
     return DRAMTables(row_fm=row_fm, out_size=out_size, side=side,
+                      # det: int-exact byte counts
                       weight_bytes=sum(g.weight_size for g in gg.groups))
 
 
@@ -116,11 +118,13 @@ def dram_fm_fast(t: DRAMTables, frame: np.ndarray,
     term is a masked sum of the static table; the frame term touches only
     the boundary/spill sets the allocator actually produced (all of whose
     members are frame-mode, non-side groups by construction)."""
+    # det: all four reductions below are over exact int64/Python-int byte
+    # counts -- no float rounding, any summation order is bit-identical
     fm = int(t.row_fm[~frame].sum())      # row_fm is 0 for side groups
-    fm += sum(alloc.boundary_reads.values())
+    fm += sum(alloc.boundary_reads.values())                    # det: int
     out = t.out_size
-    fm += sum(out[gid] for gid in alloc.boundary_writes)
-    fm += sum(out[gid] for gid in alloc.spilled
+    fm += sum(out[gid] for gid in alloc.boundary_writes)        # det: int
+    fm += sum(out[gid] for gid in alloc.spilled                 # det: int
               if gid not in alloc.boundary_writes)
     return fm
 
@@ -155,6 +159,7 @@ def dram_fm_fast_batch(t: DRAMTables, frame: np.ndarray,
     sums (the Pallas backend computes them on-device); when given they are
     used verbatim."""
     if row_terms is None:
+        # det: int64 matrix reduction, exact at any association order
         row_terms = np.where(frame, 0, t.row_fm[None, :]).sum(axis=1)
     return [int(rt) + b for rt, b in zip(row_terms.tolist(), boundary_fm)]
 
@@ -174,5 +179,6 @@ def baseline_total(gg: GroupedGraph) -> int:
             continue                        # redirect, no movement
         total += n.in_size + n.out_size + n.weight_size
         if n.kind == "add":                 # second (shortcut) operand read
+            # det: int-exact byte counts
             total += sum(gg.graph.nodes[i].out_size for i in n.inputs[1:])
     return total

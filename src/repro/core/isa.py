@@ -23,6 +23,29 @@ ACTS = {"linear": 0, "relu": 1, "leaky": 2, "swish": 3, "sigmoid": 4}
 MODES = {"row": 0, "frame": 1}
 OFFCHIP = 3                                    # buffer id meaning DRAM
 
+# Bit width of every unsigned field in the 11-word encoding, in the order
+# encode() packs them.  This is the single source of truth for range
+# validation: encode() refuses to emit a word a field does not fit in, and
+# the static verifier (repro.analysis) checks decoded/mutated instructions
+# against the same table without encoding them.
+FIELD_WIDTHS = {
+    "opcode": 8, "mode": 4, "act": 4, "k": 8, "stride": 8,       # word 0
+    "in_ch": 32, "out_ch": 32, "in_h": 32, "in_w": 32,           # words 1-4
+    "fused_pool": 8, "fused_eltwise": 8, "fused_upsample": 8,    # word 5
+    "alloc_in": 4, "alloc_out": 4, "alloc_shortcut": 4,          # word 6
+    "gid": 32,                                                   # word 9
+}
+# src_main / src_shortcut (words 7/8) are signed 32-bit: -1 is the
+# network-input / no-shortcut sentinel.
+SIGNED_FIELDS = ("src_main", "src_shortcut")
+
+
+def field_overflows(name: str, value: int) -> bool:
+    """True if ``value`` does not fit the encoding slot of ``name``."""
+    if name in SIGNED_FIELDS:
+        return not (-(1 << 31) <= value < (1 << 31))
+    return not (0 <= value < (1 << FIELD_WIDTHS[name]))
+
 
 @dataclass
 class GroupInstruction:
@@ -46,18 +69,32 @@ class GroupInstruction:
     src_shortcut: int        # producer gid of shortcut operand (-1 = none)
 
     def encode(self) -> np.ndarray:
+        # Refuse to emit a truncated word: a field past its slot width used
+        # to be silently masked (``& 0xFF`` etc.), corrupting the stream.
+        for name in FIELD_WIDTHS:
+            if field_overflows(name, getattr(self, name)):
+                raise ValueError(
+                    f"GroupInstruction.encode: field {name}="
+                    f"{getattr(self, name)} overflows its "
+                    f"{FIELD_WIDTHS[name]}-bit slot (gid {self.gid})")
+        for name in SIGNED_FIELDS:
+            if field_overflows(name, getattr(self, name)):
+                raise ValueError(
+                    f"GroupInstruction.encode: field {name}="
+                    f"{getattr(self, name)} overflows its signed 32-bit "
+                    f"slot (gid {self.gid})")
         w = np.zeros(WORDS, dtype=np.uint32)
-        w[0] = (self.opcode & 0xFF) | ((self.mode & 0xF) << 8) \
-            | ((self.act & 0xF) << 12) | ((self.k & 0xFF) << 16) \
-            | ((self.stride & 0xFF) << 24)
+        w[0] = (self.opcode) | ((self.mode) << 8) \
+            | ((self.act) << 12) | ((self.k) << 16) \
+            | ((self.stride) << 24)
         w[1] = self.in_ch
         w[2] = self.out_ch
         w[3] = self.in_h
         w[4] = self.in_w
-        w[5] = (self.fused_pool & 0xFF) | ((self.fused_eltwise & 0xFF) << 8) \
-            | ((self.fused_upsample & 0xFF) << 16)
-        w[6] = (self.alloc_in & 0xF) | ((self.alloc_out & 0xF) << 4) \
-            | ((self.alloc_shortcut & 0xF) << 8)
+        w[5] = (self.fused_pool) | ((self.fused_eltwise) << 8) \
+            | ((self.fused_upsample) << 16)
+        w[6] = (self.alloc_in) | ((self.alloc_out) << 4) \
+            | ((self.alloc_shortcut) << 8)
         w[7] = np.uint32(self.src_main & 0xFFFFFFFF)
         w[8] = np.uint32(self.src_shortcut & 0xFFFFFFFF)
         w[9] = self.gid
@@ -66,7 +103,10 @@ class GroupInstruction:
 
     @classmethod
     def decode(cls, w: np.ndarray) -> "GroupInstruction":
-        assert int(w[10]) == 0xC0FFEE, "corrupt instruction stream"
+        if int(w[10]) != 0xC0FFEE:
+            raise ValueError(
+                f"corrupt instruction stream: terminator word is "
+                f"{int(w[10]):#x}, expected 0xc0ffee")
         return cls(
             gid=int(w[9]),
             opcode=int(w[0]) & 0xFF, mode=(int(w[0]) >> 8) & 0xF,
@@ -123,6 +163,10 @@ def encode_stream(instructions: list[GroupInstruction]) -> np.ndarray:
 
 
 def decode_stream(stream: np.ndarray) -> list[GroupInstruction]:
-    assert stream.size % WORDS == 0
+    if stream.size % WORDS != 0:
+        raise ValueError(
+            f"instruction stream of {stream.size} words is not a multiple "
+            f"of the {WORDS}-word instruction size (truncated or "
+            f"misaligned stream)")
     return [GroupInstruction.decode(stream[i:i + WORDS])
             for i in range(0, stream.size, WORDS)]

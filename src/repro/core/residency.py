@@ -115,7 +115,7 @@ class ResidencyPlan:
 
     @property
     def n_resident(self) -> int:
-        return sum(m == "resident" for m in self.modes)
+        return sum(m == "resident" for m in self.modes)  # det: bool count
 
     def summary(self) -> str:
         gb = 1 / (1 << 30)

@@ -32,6 +32,10 @@ class MemCounters:
     dram_writes: int = 0
     weight_reads: int = 0
     onchip_hits: int = 0
+    # counted DRAM reads of a tensor nothing ever wrote to DRAM -- always 0
+    # for a healthy plan; nonzero means the stream reads garbage (the
+    # dynamic twin of the static verifier's SF021/SF022/SF041)
+    dangling_reads: int = 0
 
     @property
     def fm_total(self) -> int:
@@ -87,6 +91,8 @@ class Simulator:
         # DRAM read (row streaming, boundary, spill or network input).
         if count:
             st.counters.dram_reads += self._tensor_bytes(src_gid)
+            if src_gid not in st.dram:
+                st.counters.dangling_reads += 1
         return st.dram.get(src_gid)
 
     def _store(self, gid: int, tensor, instr: GroupInstruction) -> None:
@@ -116,6 +122,11 @@ class Simulator:
         if self.execute:
             assert x is not None
             st.dram[-1] = np.asarray(x)
+        else:
+            # Dry mode tracks locations only, but the network input is
+            # still DRAM-resident -- seed it so the dangling-read counter
+            # never misfires on the first fetch.
+            st.dram[-1] = None
 
         final = None
         for g in self.gg.groups:

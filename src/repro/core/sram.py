@@ -76,7 +76,7 @@ def sram_report(gg: GroupedGraph, alloc: Allocation,
 
     # Eq. (6).
     sram_total = (row_buff + out_buff + write_buff
-                  + sum(buff) + alloc.side_buff)
+                  + sum(buff) + alloc.side_buff)   # det: int-exact bytes
 
     bram = _bram18k_total(row_buff, out_buff, write_buff, buff,
                           alloc.side_buff, hw)
@@ -105,7 +105,7 @@ def _bram18k_total(row_buff: int, out_buff: int, write_buff: int,
     to = hw.to
     return (_brams(row_buff, 8, to) + _brams(out_buff, 32, to)
             + _brams(write_buff, 8, to)
-            + sum(_brams(b, 8, to) for b in buff)
+            + sum(_brams(b, 8, to) for b in buff)  # det: int bank counts
             + _brams(side_buff, 8, to))
 
 
@@ -233,7 +233,7 @@ def sram_total_fast(t: SRAMTables, frame: np.ndarray, alloc: Allocation,
                     if frm[gid]), default=0)
     write_buff = max(wr_row, wr_frame)
     sram_total = (t.row_buff + out_buff + write_buff
-                  + sum(buff) + alloc.side_buff)
+                  + sum(buff) + alloc.side_buff)   # det: int-exact bytes
     bram = _bram18k_total(t.row_buff, out_buff, write_buff, buff,
                           alloc.side_buff, hw)
     return sram_total, bram

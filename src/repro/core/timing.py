@@ -79,7 +79,7 @@ def row_latency(gg: GroupedGraph, g: Group, hw: FPGAConfig,
         # shortcut source is among group_inputs[1:], so the fused-shortcut
         # term below would double-count it (dram.row_fm_bytes has the
         # same split; the simulator byte counters arbitrate).
-        extra = sum(gg.groups[i].out_size
+        extra = sum(gg.groups[i].out_size      # det: int-exact byte counts
                     for i in gg.group_inputs(g)[1:] if i >= 0)
     else:
         sc = gg.shortcut_source_group(g)
@@ -116,6 +116,8 @@ def group_latency(gg: GroupedGraph, g: Group, alloc: Allocation,
 def latency_report(gg: GroupedGraph, alloc: Allocation,
                    hw: FPGAConfig) -> LatencyReport:
     per_group = {g.gid: group_latency(gg, g, alloc, hw) for g in gg.groups}
+    # det: float reduction fixed left-to-right in gid order (dict insertion
+    # order); latency_cycles_fast reproduces this association exactly
     return LatencyReport(cycles=sum(per_group.values()), per_group=per_group)
 
 
@@ -161,6 +163,8 @@ def latency_cycles_fast(t: LatencyTables, frame: np.ndarray,
     mem = (t.weight + io_bytes) / hw.dram_bytes_per_cycle
     frame_lat = np.maximum(t.comp, mem) + hw.group_overhead_cycles
     per = np.where(t.side, t.comp, np.where(frame, frame_lat, t.row))
+    # det: float reduction fixed left-to-right in gid order, the same
+    # association as latency_report's scalar sum (bit-identical)
     return sum(per.tolist())
 
 

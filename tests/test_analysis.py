@@ -1,0 +1,227 @@
+"""Static verifier: clean plans verify clean, broken plans are caught.
+
+Three layers of evidence:
+
+* **unit** -- diagnostics vocabulary, journal-derived live intervals, and
+  hand-crafted corruptions each hitting their dedicated code;
+* **mutation kill** -- the seeded fuzzer (analysis/mutate.py) must achieve
+  a 100% kill rate for every applicable violation class across several
+  zoo nets, with at least one expected code per class;
+* **differential** -- every mutant the dynamic Simulator detects (an
+  exception, dangling reads, or counter drift vs the original plan's
+  reports) must also be caught statically: the O(plan) verifier never
+  lags the dynamic oracle.
+"""
+import dataclasses
+
+import pytest
+
+from repro.analysis import (CLASSES, Severity, VerificationError,
+                            errors_of, journal_trace, kill_matrix,
+                            mutate_plan, render_report, simulator_detects,
+                            verify_execution_plan, verify_plan)
+from repro.analysis.__main__ import main as analysis_cli
+from repro.analysis.diagnostics import CODES, make
+from repro.cnn import build_cnn
+from repro.core.compiler import compile_graph
+from repro.core.isa import OFFCHIP
+
+NETS = [("yolov2", 416), ("resnet50", 224), ("retinanet", 512)]
+AUDIT_LIMIT = 50_000
+
+
+@pytest.fixture(scope="module")
+def plans():
+    return {name: compile_graph(build_cnn(name, size),
+                                exhaustive_limit=AUDIT_LIMIT)
+            for name, size in NETS}
+
+
+# ---------------------------------------------------------------- unit
+def test_unknown_code_rejected():
+    with pytest.raises(KeyError):
+        make("SF999", "nope")
+
+
+def test_diagnostic_render_shape():
+    d = make("SF020", "boom", gid=15, word=6, context="buf1<-g12")
+    out = d.render()
+    assert out.startswith("SF020 @g15.w6 [error] boom")
+    assert "buf1<-g12" in out
+    assert "clean" in render_report("net", [])
+
+
+def test_verification_error_message():
+    err = VerificationError("net", [make("SF050", "field k overflows")])
+    assert "1 error(s)" in str(err) and "SF050" in str(err)
+
+
+def test_every_code_has_catalog_entry():
+    for code, (title, sev) in CODES.items():
+        assert code.startswith("SF") and len(code) == 5
+        assert title and isinstance(sev, Severity)
+
+
+def test_journal_intervals_cover_alloc_out(plans):
+    """Every buffer assignment in the allocation is backed by a journal
+    interval owned by that gid and starting there."""
+    plan = plans["resnet50"]
+    trace = journal_trace(plan.grouped, plan.alloc.policy)
+    assert trace.intervals
+    for gid, b in plan.alloc.alloc_out.items():
+        iv = trace.owner_at(b, gid)
+        assert iv is not None and iv.owner == gid, (gid, b, iv)
+    # the replayed allocation is bit-identical to the plan's
+    assert trace.alloc.alloc_out == plan.alloc.alloc_out
+    assert trace.alloc.spilled == plan.alloc.spilled
+
+
+# ------------------------------------------------ hand-crafted corruptions
+def _fresh(plan):
+    return [dataclasses.replace(i) for i in plan.instructions]
+
+
+def _codes(diags):
+    return {d.code for d in diags}
+
+
+def test_detects_wrong_src_main(plans):
+    plan = plans["resnet50"]
+    ins = _fresh(plan)
+    victim = next(i for i in ins if i.src_main >= 0 and i.gid >= 2)
+    victim.src_main = (victim.src_main + 1) % victim.gid
+    diags = verify_plan(plan.grouped, plan.alloc, ins, plan.hw,
+                        feasible=True)
+    assert "SF015" in _codes(errors_of(diags))
+
+
+def test_detects_missing_instruction(plans):
+    plan = plans["resnet50"]
+    diags = verify_plan(plan.grouped, plan.alloc,
+                        plan.instructions[:-1], plan.hw, feasible=True)
+    assert "SF014" in _codes(errors_of(diags))
+
+
+def test_detects_duplicate_instruction(plans):
+    plan = plans["resnet50"]
+    ins = _fresh(plan) + [dataclasses.replace(plan.instructions[3])]
+    diags = verify_plan(plan.grouped, plan.alloc, ins, plan.hw,
+                        feasible=True)
+    codes = _codes(errors_of(diags))
+    assert "SF012" in codes or "SF013" in codes
+
+
+def test_detects_use_before_def(plans):
+    plan = plans["resnet50"]
+    ins = _fresh(plan)
+    victim = next(i for i in ins if i.src_shortcut != -1)
+    victim.src_shortcut = victim.gid + 1
+    diags = verify_plan(plan.grouped, plan.alloc, ins, plan.hw,
+                        feasible=True)
+    assert "SF010" in _codes(errors_of(diags))
+
+
+def test_detects_row_mode_onchip_alloc(plans):
+    plan = plans["yolov2"]
+    ins = _fresh(plan)
+    victim = next(i for i in ins if i.mode == 0)
+    victim.alloc_out = 1
+    diags = verify_plan(plan.grouped, plan.alloc, ins, plan.hw,
+                        feasible=True)
+    assert "SF053" in _codes(errors_of(diags))
+
+
+def test_detects_journal_divergence(plans):
+    """Tampering with the allocation record (not the stream) trips the
+    journal replay cross-check."""
+    plan = plans["resnet50"]
+    alloc = dataclasses.replace(
+        plan.alloc, alloc_out=dict(plan.alloc.alloc_out),
+        spilled=set(plan.alloc.spilled))
+    gid = next(iter(sorted(alloc.alloc_out)))
+    alloc.alloc_out[gid] = (alloc.alloc_out[gid] + 1) % 3
+    diags = verify_plan(plan.grouped, alloc, plan.instructions, plan.hw,
+                        feasible=True)
+    assert "SF024" in _codes(errors_of(diags))
+
+
+# ----------------------------------------------------- mutation-kill gate
+def test_mutation_kill_matrix(plans):
+    """100% kill rate: every applicable (net, class, seed) mutant must be
+    caught with at least one of its expected codes, and every class must
+    apply on at least one net."""
+    rows = kill_matrix(plans, seeds=(0, 1, 2))
+    applied = [r for r in rows if r["applied"]]
+    assert applied, "no mutation applied anywhere"
+    missed = [r for r in applied if not r["killed"]]
+    assert not missed, f"mutants survived the verifier: {missed}"
+    applied_classes = {r["cls"] for r in applied}
+    assert applied_classes == set(CLASSES), (
+        f"classes never applied on any net: "
+        f"{set(CLASSES) - applied_classes}")
+
+
+def test_mutants_are_deterministic(plans):
+    plan = plans["resnet50"]
+    a = mutate_plan(plan, "clobber_alloc", seed=5)
+    b = mutate_plan(plan, "clobber_alloc", seed=5)
+    assert a.description == b.description
+    assert a.instructions == b.instructions
+
+
+def test_mutation_does_not_touch_original(plans):
+    plan = plans["resnet50"]
+    before = [dataclasses.replace(i) for i in plan.instructions]
+    spilled = set(plan.alloc.spilled)
+    for cls in CLASSES:
+        mutate_plan(plan, cls, seed=0)
+    assert plan.instructions == before
+    assert plan.alloc.spilled == spilled
+
+
+@pytest.mark.parametrize("cls", sorted(CLASSES))
+def test_simulator_detection_implies_static_kill(plans, cls):
+    """Differential gate: the static verifier dominates the dynamic
+    oracle on every injected mutant."""
+    for name, plan in plans.items():
+        for seed in (0, 1):
+            m = mutate_plan(plan, cls, seed)
+            if m is None:
+                continue
+            dynamic = simulator_detects(plan, m)
+            static = bool(errors_of(m.verify()))
+            assert not dynamic or static, (
+                f"{name}/{cls}/seed{seed}: simulator detects "
+                f"({m.description}) but the static verifier is silent")
+
+
+# --------------------------------------------------------- compiler knob
+def test_compile_verify_knob_off_strict():
+    g = build_cnn("vgg16-conv", 224)
+    off = compile_graph(g, verify="off")
+    assert off.diagnostics == []
+    strict = compile_graph(g, verify="strict")
+    assert errors_of(strict.diagnostics) == []
+    with pytest.raises(ValueError, match="verify"):
+        compile_graph(g, verify="loose")
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_strict_single_net(capsys):
+    assert analysis_cli(["--net", "vgg16-conv", "--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "vgg16-conv" in out and "clean" in out
+
+
+def test_cli_report_and_kill_gate(tmp_path, capsys):
+    report = tmp_path / "verify.txt"
+    code = analysis_cli(["--net", "yolov2", "--strict", "--mutation-kill",
+                         "--seeds", "1", "--report", str(report)])
+    assert code == 0
+    text = report.read_text()
+    assert "yolov2" in text and "mutants killed" in text
+
+
+def test_cli_rejects_unknown_net(capsys):
+    with pytest.raises(SystemExit):
+        analysis_cli(["--net", "lenet"])

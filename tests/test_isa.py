@@ -1,0 +1,130 @@
+"""ISA encoding hardening: round-trip fidelity and refusal to truncate.
+
+Pins the encode-overflow bugfix: a field past its slot width used to be
+silently masked (``& 0xFF`` etc.), emitting a corrupted-but-plausible
+stream; ``encode()`` now raises ``ValueError``.  ``decode_stream()``
+likewise rejects streams whose length is not a multiple of the 11-word
+instruction size, and ``decode()`` rejects a bad terminator word.
+Round-trip property tests (hypothesis, optional) prove every in-range
+instruction survives encode -> decode bit-exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.cnn import build_cnn
+from repro.core.compiler import compile_graph
+from repro.core.isa import (ACTS, FIELD_WIDTHS, MODES, OFFCHIP, OPCODES,
+                            WORDS, GroupInstruction, decode_stream,
+                            encode_stream, field_overflows)
+from tests.hypothesis_compat import given, settings, st
+
+
+def _instr(**overrides) -> GroupInstruction:
+    base = dict(gid=7, opcode=OPCODES["conv"], mode=MODES["frame"], k=3,
+                stride=1, in_ch=64, out_ch=128, in_h=56, in_w=56,
+                act=ACTS["relu"], fused_pool=0, fused_eltwise=1,
+                fused_upsample=0, alloc_in=0, alloc_out=1,
+                alloc_shortcut=2, src_main=6, src_shortcut=3)
+    base.update(overrides)
+    return GroupInstruction(**base)
+
+
+# ------------------------------------------------------------- round trips
+def test_round_trip_basic():
+    i = _instr()
+    j = GroupInstruction.decode(i.encode())
+    assert i == j
+
+
+def test_round_trip_sentinels():
+    i = _instr(src_main=-1, src_shortcut=-1, fused_eltwise=0,
+               alloc_in=OFFCHIP, alloc_out=OFFCHIP, alloc_shortcut=OFFCHIP)
+    assert GroupInstruction.decode(i.encode()) == i
+
+
+_small = {name: st.integers(min_value=0,
+                            max_value=(1 << width) - 1)
+          for name, width in FIELD_WIDTHS.items() if width < 32}
+_wide = {name: st.integers(min_value=0, max_value=(1 << 32) - 1)
+         for name, width in FIELD_WIDTHS.items() if width == 32}
+_signed = st.integers(min_value=-(1 << 31), max_value=(1 << 31) - 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(fields=st.fixed_dictionaries({**_small, **_wide,
+                                     "src_main": _signed,
+                                     "src_shortcut": _signed}))
+def test_round_trip_property(fields):
+    """Any instruction whose fields all fit their slots round-trips
+    bit-exactly through the 11-word encoding."""
+    i = GroupInstruction(**fields)
+    j = GroupInstruction.decode(i.encode())
+    assert i == j
+
+
+@settings(max_examples=100, deadline=None)
+@given(name=st.sampled_from(sorted(n for n, w in FIELD_WIDTHS.items()
+                                   if w < 32)),
+       excess=st.integers(min_value=0, max_value=1 << 20))
+def test_encode_overflow_raises_property(name, excess):
+    """Any unsigned field one-past (or further past) its slot width must
+    raise, never silently truncate."""
+    i = _instr(**{name: (1 << FIELD_WIDTHS[name]) + excess})
+    with pytest.raises(ValueError, match=name):
+        i.encode()
+
+
+# ------------------------------------------------------- overflow refusal
+@pytest.mark.parametrize("name", sorted(n for n, w in FIELD_WIDTHS.items()
+                                        if w < 32))
+def test_encode_overflow_raises_each_field(name):
+    i = _instr(**{name: 1 << FIELD_WIDTHS[name]})
+    with pytest.raises(ValueError, match=f"field {name}="):
+        i.encode()
+
+
+@pytest.mark.parametrize("name", sorted(FIELD_WIDTHS))
+def test_encode_negative_unsigned_raises(name):
+    with pytest.raises(ValueError, match=f"field {name}="):
+        _instr(**{name: -1}).encode()
+
+
+@pytest.mark.parametrize("name,value", [("src_main", 1 << 31),
+                                        ("src_shortcut", -(1 << 31) - 1)])
+def test_encode_signed_overflow_raises(name, value):
+    with pytest.raises(ValueError, match="signed 32-bit"):
+        _instr(**{name: value}).encode()
+
+
+def test_field_overflows_boundaries():
+    assert not field_overflows("k", (1 << 8) - 1)
+    assert field_overflows("k", 1 << 8)
+    assert not field_overflows("src_main", -(1 << 31))
+    assert field_overflows("src_main", 1 << 31)
+
+
+# ----------------------------------------------------- stream validation
+def test_decode_stream_rejects_misaligned():
+    stream = encode_stream([_instr()])
+    with pytest.raises(ValueError, match="multiple"):
+        decode_stream(stream[:-1])
+    with pytest.raises(ValueError, match="multiple"):
+        decode_stream(np.concatenate([stream, stream[:5]]))
+
+
+def test_decode_rejects_bad_terminator():
+    w = _instr().encode()
+    w[10] = 0xDEAD
+    with pytest.raises(ValueError, match="terminator"):
+        GroupInstruction.decode(w)
+
+
+def test_zoo_stream_round_trip():
+    """A real compiled plan's full stream round-trips instruction-exactly
+    (this covers the sentinel encodings -1/-1 and OFFCHIP fields at
+    scale)."""
+    plan = compile_graph(build_cnn("resnet50", 224),
+                         exhaustive_limit=50_000)
+    stream = encode_stream(plan.instructions)
+    assert stream.size == WORDS * len(plan.instructions)
+    assert decode_stream(stream) == plan.instructions

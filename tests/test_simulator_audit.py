@@ -50,3 +50,40 @@ def test_fm_counters_match_model_on_corner_policies(name, size):
     for policy_fn in (all_row_policy, all_frame_policy):
         plan = compile_graph(g, policy=policy_fn(gg))
         _audit(plan, f"{name}@{size} {policy_fn.__name__}")
+
+
+@pytest.mark.parametrize("name,size", ZOO)
+def test_compiled_plan_verifies_strict(name, size):
+    """Every zoo net's compiled plan passes the static verifier with zero
+    error-severity diagnostics (``verify="strict"``); the only tolerated
+    warning class is the advisory BRAM bank count (SF031), which the
+    optimizer's feasibility contract deliberately does not constrain and
+    which mirrors the plan's own ``sram_report``."""
+    plan = compile_graph(build_cnn(name, size),
+                         exhaustive_limit=AUDIT_LIMIT, verify="strict")
+    assert [d for d in plan.diagnostics if d.severity.value == "error"] \
+        == []
+    assert {d.code for d in plan.diagnostics} <= {"SF031"}, (
+        f"{name}@{size}: unexpected warnings "
+        f"{[d.render() for d in plan.diagnostics]}")
+
+
+@pytest.mark.parametrize("name,size", [("yolov2", 416), ("resnet50", 224)])
+def test_compiled_plan_verifies_strict_device_replay(name, size):
+    """The device-replay search path produces the same verifiable plan:
+    strict verification holds on both allocator replay engines."""
+    plan = compile_graph(build_cnn(name, size),
+                         exhaustive_limit=AUDIT_LIMIT, replay="device",
+                         verify="strict")
+    assert [d for d in plan.diagnostics if d.severity.value == "error"] \
+        == []
+
+
+def test_dry_run_counts_no_dangling_reads():
+    """The dynamic twin of the static availability checks: a healthy
+    plan's dry run never reads a DRAM tensor nothing wrote."""
+    plan = compile_graph(build_cnn("retinanet", 512),
+                         exhaustive_limit=AUDIT_LIMIT)
+    _, counters = simulate(plan.grouped, plan.alloc, plan.instructions,
+                           execute=False)
+    assert counters.dangling_reads == 0

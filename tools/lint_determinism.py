@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""AST lint: flag unannotated float accumulation in the analytic models.
+
+The repo's north star is bit-identical scoring across replay paths,
+worker counts and batch sizes, and the analytic models (dram / sram /
+timing / residency) feed the search's total order.  A float ``sum()``
+re-associated by a refactor is exactly the kind of silent nondeterminism
+that breaks oracle exactness, so every accumulation in those modules must
+be *annotated*: a ``# det:`` pragma on (or immediately above) the call
+stating why it is exact -- integer-exact operands, or a deliberately
+fixed left-to-right reduction.
+
+Allowed without a pragma: ``math.fsum`` (correctly-rounded) and
+``np.cumsum`` (fixed sequential prefix scan).  Everything else that spells
+``sum`` -- the builtin, ``np.sum``, ``.sum()`` method calls -- needs the
+pragma.
+
+Usage::
+
+    python tools/lint_determinism.py            # lint the default modules
+    python tools/lint_determinism.py FILE...    # lint specific files
+
+Exit 1 when any unannotated accumulation is found.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_TARGETS = [
+    REPO / "src/repro/core/dram.py",
+    REPO / "src/repro/core/sram.py",
+    REPO / "src/repro/core/timing.py",
+    REPO / "src/repro/core/residency.py",
+]
+PRAGMA = "# det:"
+EXEMPT = {"fsum", "cumsum"}
+
+
+def _call_name(node: ast.Call) -> str | None:
+    """The accumulation-relevant name of a call: 'sum' for the builtin,
+    the attribute name for np.sum / arr.sum() / math.fsum."""
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def lint_file(path: Path) -> list[str]:
+    src = path.read_text()
+    rel = path.relative_to(REPO) if path.is_relative_to(REPO) else path
+    lines = src.splitlines()
+    tree = ast.parse(src, filename=str(path))
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        if name in EXEMPT or name != "sum":
+            continue
+        # pragma anywhere on the call's own lines, or in the contiguous
+        # comment block immediately above the statement
+        lo = node.lineno - 1
+        while lo > 0 and lines[lo - 1].strip().startswith("#"):
+            lo -= 1
+        hi = min(len(lines), (node.end_lineno or node.lineno))
+        if any(PRAGMA in lines[i] for i in range(lo, hi)):
+            continue
+        findings.append(
+            f"{rel}:{node.lineno}: unannotated "
+            f"accumulation `{ast.unparse(node)[:70]}` -- add a "
+            f"`{PRAGMA} <why this reduction is exact>` pragma or use "
+            f"math.fsum")
+    return findings
+
+
+def main(argv: list[str]) -> int:
+    targets = ([Path(a).resolve() for a in argv] if argv
+               else DEFAULT_TARGETS)
+    findings: list[str] = []
+    for path in targets:
+        if not path.exists():
+            print(f"lint_determinism: {path} does not exist",
+                  file=sys.stderr)
+            return 2
+        findings.extend(lint_file(path))
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"lint_determinism: {len(findings)} unannotated "
+              f"accumulation(s)", file=sys.stderr)
+        return 1
+    n = len(targets)
+    print(f"lint_determinism: {n} module(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
