@@ -17,8 +17,12 @@ with the PR 3 per-tuple engine rate as the committed reference point; an
 **allocator-replay comparison** (``alloc_replay``): the same slice scored
 under the journal Python replay vs the tensorized device replay of
 kernels/alloc_scan.py (numpy reference / jax scan / Pallas interpret);
-and a **workers sweep**: the same kind of slice pushed through the search
-pool at 1/2/4/8 workers.  Everything lands in ``BENCH_compile.json``.
+a **workers sweep**: the same kind of slice pushed through the search
+pool at 1/2/4/8 workers; and a **pruning benchmark** (``prune``): the
+FULL yolov2 space searched unpruned vs branch-and-bound pruned vs
+kill-healed at 2 workers, byte-identity asserted, recording the pruned
+fraction, the normalized speedup and the healed search rate.  Everything
+lands in ``BENCH_compile.json``.
 The numbers are only meaningful because the engine and the batched scorer
 are oracle-exact -- equivalence is enforced by
 tests/test_cutpoint_engine.py and tests/test_score_batch.py, and
@@ -58,9 +62,9 @@ from repro.core.cutpoint import (DEFAULT_BATCH_SIZE,             # noqa: E402
                                  monotone_runs, search, split_blocks)
 from repro.core.grouping import group_nodes                      # noqa: E402
 from repro.core.hw import KCU1500                                # noqa: E402
-from repro.core.search_pool import (ParallelSearchDriver,        # noqa: E402
-                                    SearchPreempted, _run_subspace,
-                                    partition_space)
+from repro.core.search_pool import (TASKS_PER_WORKER,            # noqa: E402
+                                    ParallelSearchDriver, SearchPreempted,
+                                    _run_subspace, partition_space)
 from repro.runtime import chaos                                  # noqa: E402
 from repro.runtime.fault_tolerance import PreemptionGuard        # noqa: E402
 
@@ -128,9 +132,9 @@ def bench_workers_sweep(name: str, size: int, worker_counts: list[int],
             with ParallelSearchDriver(workers=w) as driver:
                 results = driver.map(_run_subspace, tasks)
         wall = time.perf_counter() - t0
-        evals = sum(n for _, n, _ in results)
+        evals = sum(n for _, n, _p, _e in results)
         assert evals == tuples
-        best = min((m for m, _, _ in results),
+        best = min((m for m, _n, _p, _e in results),
                    key=lambda m: (_key(m, "latency"), m.cuts))
         argmins.add(best.cuts)
         eps = evals / wall
@@ -192,9 +196,9 @@ def bench_batched_slice(name: str = "yolov2", size: int = 416,
             t0 = time.perf_counter()
             results = [_run_subspace(t) for t in tasks]
             wall = time.perf_counter() - t0
-            evals = sum(n for _, n, _ in results)
+            evals = sum(n for _, n, _p, _e in results)
             assert evals == tuples
-            best = min((m for m, _, _ in results),
+            best = min((m for m, _n, _p, _e in results),
                        key=lambda m: (_key(m, "latency"), m.cuts))
             argmins.add(best.cuts)
             eps = evals / wall
@@ -422,6 +426,133 @@ def bench_chaos(name: str = "yolov2", size: int = 416,
     return record
 
 
+def bench_prune(name: str = "yolov2", size: int = 416,
+                workers: int = 2) -> dict:
+    """Branch-and-bound pruning benchmark on the FULL detector cut space
+    (the ISSUE 8 acceptance scenario): yolov2's 7.96M tuples searched
+    unpruned and pruned at ``--workers`` worker processes, asserting the
+    results byte-identical (cuts, metrics and -- under the default
+    ``count_pruned`` -- ``evaluated``), then a third *healed* pruned run
+    with an injected worker death mid-space, also byte-identical.  The
+    record lands in BENCH_compile.json: ``pruned`` / ``pruned_fraction``
+    (how much of the space the admissible bound eliminated before any
+    replay), the busy-loop-normalized wall-clock speedup, and the healed
+    run's search rate (``healed_evals_per_sec``)."""
+    gg = group_nodes(build_cnn(name, size))
+    blocks = split_blocks(gg)
+    runs = monotone_runs(blocks)
+    space = 1
+    for r in runs:
+        space *= len(r) + 1
+
+    def run(tag, prune, injector=None):
+        if injector is not None:
+            chaos.install(injector)
+        try:
+            rate = measure_busyloop_rate()
+            t0 = time.perf_counter()
+            with ParallelSearchDriver(workers=workers,
+                                      mp_context="fork") as d:
+                res = d.search(gg, KCU1500, prune=prune)
+            wall = time.perf_counter() - t0
+        finally:
+            if injector is not None:
+                chaos.uninstall()
+        print(f"prune bench {tag}: {wall:.1f}s busyloop={rate:.0f}/s "
+              f"pruned={res.pruned}")
+        return res, wall, rate
+
+    unp, unp_wall, unp_rate = run("unpruned", False)
+    prn, prn_wall, prn_rate = run("pruned", True)
+    for f in METRICS:
+        assert getattr(prn.best, f) == getattr(unp.best, f), f
+    assert prn.best.cuts == unp.best.cuts
+    assert prn.evaluated == unp.evaluated      # count_pruned default
+    assert unp.pruned == 0 and prn.pruned > 0
+
+    # healed pruned run: hard-kill the worker on the mid-space task's
+    # first attempt; the pool heals, re-dispatches, and must still merge
+    # to the identical result with pruning active
+    prefixes, _sd = partition_space(runs, workers * TASKS_PER_WORKER)
+    doomed = prefixes[len(prefixes) // 2]
+    inj = chaos.ChaosInjector(
+        events={("task", doomed): chaos.ChaosEvent("kill")})
+    healed, healed_wall, healed_rate = run("healed", True, injector=inj)
+    assert healed.best.cuts == prn.best.cuts
+    assert healed.evaluated == prn.evaluated
+    assert any(e.kind == "retry" for e in healed.events)
+
+    speedup = (unp_wall * unp_rate) / (prn_wall * prn_rate)
+    record = {
+        "network": f"{name}@{size}",
+        "workers": workers,
+        "search_space": space,
+        "pruned": prn.pruned,
+        "pruned_fraction": round(prn.pruned / space, 4),
+        "unpruned_wall_s": round(unp_wall, 2),
+        "pruned_wall_s": round(prn_wall, 2),
+        "speedup_normalized": round(speedup, 2),
+        "busyloop_unpruned": round(unp_rate, 1),
+        "busyloop_pruned": round(prn_rate, 1),
+        "healed_wall_s": round(healed_wall, 2),
+        "healed_evals_per_sec": round(healed.evaluated / healed_wall, 1),
+        "healed_pruned": healed.pruned,
+        "healed_bit_identical": True,          # asserted above
+        "note": "full cut space searched unpruned vs branch-and-bound "
+                "pruned (argmin, metrics, evaluated asserted identical); "
+                "speedup is busy-loop-normalized; healed run repeats the "
+                "pruned search through an injected worker death",
+    }
+    print(f"prune bench: {100 * record['pruned_fraction']:.1f}% of "
+          f"{space} tuples pruned, {speedup:.2f}x normalized speedup, "
+          f"healed rate {record['healed_evals_per_sec']:.0f} evals/s")
+    return record
+
+
+def smoke_prune_gate() -> dict:
+    """CI gate for branch-and-bound pruning: on resnet50 the pruned
+    serial search must (a) return the byte-identical SearchResult of the
+    unpruned search, (b) eliminate at least half the cut space (measured
+    share on this net is ~0.8), and (c) win on busy-loop-normalized wall
+    clock by >=1.3x (measured ~4-5x; the floor leaves room for CI
+    weather without letting the bound rot into a no-op)."""
+    gg = group_nodes(build_cnn("resnet50", 224))
+    rate_u = measure_busyloop_rate()
+    t0 = time.perf_counter()
+    unp = search(gg, KCU1500, prune=False)
+    unp_wall = time.perf_counter() - t0
+    rate_p = measure_busyloop_rate()
+    t0 = time.perf_counter()
+    prn = search(gg, KCU1500, prune=True)
+    prn_wall = time.perf_counter() - t0
+    assert prn.best.cuts == unp.best.cuts
+    for f in METRICS:
+        assert getattr(prn.best, f) == getattr(unp.best, f), f
+    assert prn.evaluated == unp.evaluated
+    fraction = prn.pruned / unp.evaluated
+    speedup = (unp_wall * rate_u) / (prn_wall * rate_p)
+    record = {
+        "network": "resnet50@224",
+        "pruned_fraction": round(fraction, 4),
+        "unpruned_wall_s": round(unp_wall, 3),
+        "pruned_wall_s": round(prn_wall, 3),
+        "speedup_normalized": round(speedup, 2),
+        "min_fraction": 0.5,
+        "min_speedup": 1.3,
+        "bit_identical": True,                 # asserted above
+        "passed": fraction >= 0.5 and speedup >= 1.3,
+    }
+    if record["passed"]:
+        print(f"prune gate OK: {100 * fraction:.1f}% pruned, "
+              f"{speedup:.2f}x normalized speedup")
+    else:
+        record["fail_msg"] = (
+            f"prune gate: {100 * fraction:.1f}% pruned (need >=50%) at "
+            f"{speedup:.2f}x normalized speedup (need >=1.3x) -- the "
+            f"bound stopped eliminating work")
+    return record
+
+
 def bench_network(name: str, size: int, budget_s: float,
                   check_equiv: bool = False,
                   compile_workers: int = 1) -> dict:
@@ -640,6 +771,11 @@ def main() -> None:
     ap.add_argument("--alloc-only", action="store_true",
                     help="re-measure only the allocator-replay comparison "
                          "and splice it into the existing output JSON")
+    ap.add_argument("--prune-only", action="store_true",
+                    help="re-measure only the branch-and-bound pruning "
+                         "benchmark (full yolov2 space, pruned vs unpruned "
+                         "vs kill-healed at 2 workers) and splice it into "
+                         "the existing output JSON")
     ap.add_argument("--chaos", action="store_true",
                     help="fault-tolerance benchmark+gate on the yolov2 "
                          "slice (clean / worker-kill / SIGTERM-drain+"
@@ -678,6 +814,17 @@ def main() -> None:
         print(f"updated alloc_replay in {args.output}")
         return
 
+    if args.prune_only:
+        if "fork" not in _mp.get_all_start_methods():
+            print("prune bench requires the fork start method (the healed "
+                  "run's injector must reach workers); skipping")
+            return
+        payload = json.loads(Path(args.output).read_text())
+        payload["prune"] = bench_prune("yolov2", 416)
+        Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"updated prune in {args.output}")
+        return
+
     zoo = SMOKE_ZOO if args.smoke else ZOO
     budget = 0.4 if args.smoke else 3.0
     results = {}
@@ -697,19 +844,24 @@ def main() -> None:
         gate = smoke_batched_gate(results, committed)
         smoke_parallel_gate()
         verify_gate = smoke_verify_gate()
+        prune_gate = smoke_prune_gate()
         smoke_out = Path("BENCH_smoke.json")
         smoke_out.write_text(json.dumps(
             {"networks": results, "batched_gate": gate,
-             "verify_gate": verify_gate}, indent=2) + "\n")
+             "verify_gate": verify_gate, "prune_gate": prune_gate},
+            indent=2) + "\n")
         print(f"wrote {smoke_out} (CI artifact; committed JSON untouched)")
         # raised only now, after the diagnostic artifacts are on disk
         assert gate.get("passed", True), gate["fail_msg"]
         assert verify_gate["passed"], verify_gate["fail_msg"]
+        assert prune_gate["passed"], prune_gate["fail_msg"]
         return
 
     sweep = bench_workers_sweep("yolov2", 416, worker_counts=[1, 2, 4, 8])
     batched_slice = bench_batched_slice("yolov2", 416)
     alloc_replay = bench_alloc_replay("yolov2", 416)
+    prune = bench_prune("yolov2", 416) \
+        if "fork" in _mp.get_all_start_methods() else None
 
     # the floor the CI smoke gate regresses against: the batched scorer's
     # rate on SMOKE_ZOO[1] (resnet50 -- the larger smoke network, whose
@@ -737,6 +889,7 @@ def main() -> None:
         "networks": results,
         "batched_slice": batched_slice,
         "alloc_replay": alloc_replay,
+        "prune": prune,
         "smoke_floor": smoke_floor,
         "workers_sweep": sweep,
     }

@@ -17,16 +17,20 @@ from repro.analysis.diagnostics import (CODES, Diagnostic, Severity,
                                         VerificationError, render_report)
 from repro.analysis.liveness import (BufferInterval, JournalTrace,
                                      journal_trace, render_intervals)
-from repro.analysis.mutate import (CLASSES, Mutant, kill_matrix,
-                                   mutate_plan, render_kill_matrix,
-                                   simulator_detects)
+from repro.analysis.mutate import (BOUND_CLASSES, CLASSES, Mutant,
+                                   bound_kill_matrix,
+                                   bound_survives_differential, kill_matrix,
+                                   mutate_bound, mutate_plan,
+                                   render_kill_matrix, simulator_detects)
 from repro.analysis.verifier import (errors_of, verify_execution_plan,
                                      verify_plan)
 
 __all__ = [
     "CODES", "Diagnostic", "Severity", "VerificationError",
     "render_report", "BufferInterval", "JournalTrace", "journal_trace",
-    "render_intervals", "CLASSES", "Mutant", "kill_matrix", "mutate_plan",
-    "render_kill_matrix", "simulator_detects", "errors_of",
-    "verify_execution_plan", "verify_plan",
+    "render_intervals", "BOUND_CLASSES", "CLASSES", "Mutant",
+    "bound_kill_matrix", "bound_survives_differential", "kill_matrix",
+    "mutate_bound", "mutate_plan", "render_kill_matrix",
+    "simulator_detects", "errors_of", "verify_execution_plan",
+    "verify_plan",
 ]

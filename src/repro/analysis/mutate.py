@@ -21,6 +21,7 @@ always produces the same mutant, so CI failures replay exactly.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import random
 from dataclasses import dataclass
 
@@ -212,6 +213,127 @@ def kill_matrix(plans: dict[str, object],
                     "killed": bool(errs) and any(c in m.expect
                                                  for c in errs),
                     "codes": errs, "description": m.description})
+    return rows
+
+
+# --------------------------------------------------- bound-mutation fuzzer
+# Adversarial mutations of ``CutpointEngine.prefix_bound``, the admissible
+# lower bound branch-and-bound pruning rests on (core/cutpoint.py).  A
+# broken bound does NOT corrupt a plan -- it silently prunes the true
+# argmin -- so the plan verifier above cannot see it; instead the
+# *differential property layer* (tests/test_branch_bound.py) must kill it:
+#
+# * ``deflate_bound`` -- the bound claims lower than the prefix-exact
+#   value.  Deflation is still admissible (it never prunes the optimum,
+#   only prunes less), which is exactly why a bit-identity test can never
+#   catch it; the full-depth exactness property does: at
+#   ``depth == len(runs)`` the completion is unique, so the bound must
+#   EQUAL the candidate's exact primary metric, and any deflation breaks
+#   the equality.
+# * ``inflate_bound`` -- the bound claims higher than the true completion
+#   floor: the production-dangerous direction (prunes sub-spaces that may
+#   hold the argmin).  Killed by the admissibility property -- bound key
+#   <= every brute-forced completion key -- and by full-depth exactness.
+#
+# The gate is the same shape as ``kill_matrix``: every (net, class, seed)
+# mutant must fail at least one differential probe, 100%.
+BOUND_CLASSES: dict[str, str] = {
+    "deflate_bound": "bound claims lower than the prefix-exact value",
+    "inflate_bound": "bound claims higher than the true completion floor",
+}
+
+
+def mutate_bound(bound_fn, cls: str, seed: int):
+    """A broken variant of ``bound_fn`` (a ``prefix_bound`` method).
+
+    Deterministic in ``(cls, seed)``: the same seed always produces the
+    same deflation/inflation factor.  The constant +-1 keeps the mutation
+    strict even at a zero bound."""
+    if cls not in BOUND_CLASSES:
+        raise KeyError(f"unknown bound-mutation class {cls!r}; "
+                       f"expected one of {sorted(BOUND_CLASSES)}")
+    rng = random.Random(seed)
+    if cls == "deflate_bound":
+        scale = rng.uniform(0.3, 0.9)
+
+        def mutated(cuts, depth, objective):
+            return bound_fn(cuts, depth, objective) * scale - 1
+    else:
+        scale = rng.uniform(1.5, 4.0)
+
+        def mutated(cuts, depth, objective):
+            return bound_fn(cuts, depth, objective) * scale + 1
+    mutated.cls = cls
+    mutated.seed = seed
+    mutated.scale = scale
+    return mutated
+
+
+def bound_survives_differential(engine, bound_fn=None, seed: int = 0,
+                                probes: int = 6,
+                                max_slice: int = 256) -> bool:
+    """Run the property layer's two bound checks against ``bound_fn``.
+
+    Returns True iff every probe passes -- the genuine
+    ``engine.prefix_bound`` survives (that is
+    ``test_branch_bound.test_bound_differential_sound``); every
+    :func:`mutate_bound` mutant must NOT.  Probes are seeded and
+    deterministic:
+
+    1. **full-depth exactness** -- on a random full tuple, the bound at
+       ``depth == len(runs)`` must equal ``evaluate``'s exact primary
+       metric for each objective;
+    2. **admissibility vs brute force** -- on the deepest prefix of that
+       tuple whose completion count fits ``max_slice``, the bound key
+       ``(False, lb, 0)`` must not exceed any brute-forced completion's
+       objective key.
+    """
+    from repro.core.cutpoint import _key
+    if bound_fn is None:
+        bound_fn = engine.prefix_bound
+    runs = engine.runs
+    nr = len(runs)
+    if not nr:
+        return True
+    dims = [len(r) + 1 for r in runs]
+    rng = random.Random(seed ^ 0x5FBD)
+    objectives = ("latency", "sram", "dram")
+    for _ in range(probes):
+        t = tuple(rng.randrange(d) for d in dims)
+        m = engine.evaluate(t, memoize=False)
+        for obj in objectives:
+            if bound_fn(t, nr, obj) != _key(m, obj)[1]:
+                return False
+        depth, total = nr, 1
+        while depth > 1 and total * dims[depth - 1] <= max_slice:
+            depth -= 1
+            total *= dims[depth]
+        if depth == nr:
+            continue
+        batch = [t[:depth] + s for s in
+                 itertools.product(*[range(d) for d in dims[depth:]])]
+        scored = engine.score_batch(batch, memoize=False)
+        for obj in objectives:
+            bk = (False, bound_fn(t, depth, obj), 0)
+            if any(bk > _key(c, obj) for c in scored):
+                return False
+    return True
+
+
+def bound_kill_matrix(engines: dict[str, object],
+                      seeds: tuple[int, ...] = (0, 1, 2),
+                      probes: int = 6) -> list[dict]:
+    """Every bound-mutation class x seed over every engine; one row per
+    injection.  Rows: net, cls, seed, killed, scale."""
+    rows = []
+    for net, engine in engines.items():
+        for cls in BOUND_CLASSES:
+            for seed in seeds:
+                mutated = mutate_bound(engine.prefix_bound, cls, seed)
+                killed = not bound_survives_differential(
+                    engine, mutated, seed=seed, probes=probes)
+                rows.append({"net": net, "cls": cls, "seed": seed,
+                             "killed": killed, "scale": mutated.scale})
     return rows
 
 

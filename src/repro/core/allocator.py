@@ -434,6 +434,25 @@ def arrays_to_state(arrays: dict[str, np.ndarray],
                       location=location, live_in_buffer=live, lean=lean)
 
 
+def alloc_bound_terms(state: AllocState) -> tuple[int, int, int, int]:
+    """Monotone buffer terms of a (checkpointed) prefix state:
+    ``(buff[0], buff[1], buff[2], side_buff)``.
+
+    Every one of these is only ever *max-updated* by ``alloc_step`` (the
+    ``if x > buff[b]`` / ``if out_size > side_buff`` sites above), so the
+    values read from any prefix state lower-bound the values of every
+    replay that continues from it, whatever modes the remaining groups
+    take.  The same monotonicity holds for the boundary sets
+    (``boundary_writes`` / ``boundary_reads`` / ``spilled`` only grow),
+    which is what makes the cut-point engine's incremental accumulators
+    (``_x_io`` / ``_x_bfm`` / ``_x_wrf``) valid prefix floors too.  The
+    branch-and-bound pruner (``cutpoint.CutpointEngine.prefix_bound``)
+    builds its admissible SRAM floor from exactly these terms."""
+    a = state.alloc
+    b = a.buff
+    return b[0], b[1], b[2], a.side_buff
+
+
 def spill_is_long_path(gg: GroupedGraph, gid: int,
                        long_path_span: int = 8) -> bool:
     """Whether a spill of ``gid``'s output is tolerable long-path data

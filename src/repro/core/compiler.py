@@ -101,6 +101,8 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
                   task_deadline_s: float | None = None,
                   resume_dir=None,
                   guard=None,
+                  prune: bool = True,
+                  count_pruned: bool = True,
                   verify: str = "off") -> ExecutionPlan:
     """Compile a CNN graph into an :class:`ExecutionPlan`.
 
@@ -126,6 +128,17 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
     ``guard`` (a ``PreemptionGuard``) makes SIGTERM drain the search
     cleanly (raising ``SearchPreempted``) instead of dying mid-task.
 
+    ``prune`` (default on) enables exact branch-and-bound pruning of the
+    cut space: sub-spaces whose admissible lower bound exceeds the
+    incumbent are skipped before any allocator replay.  The argmin cut
+    and its metrics are bit-identical to the unpruned search by the
+    bound's admissibility (tests/test_branch_bound.py); with
+    ``count_pruned`` (default on) ``plan.search.evaluated`` also stays
+    the full enumeration count (scored + pruned), so existing
+    accounting-based comparisons keep holding.  ``count_pruned=False``
+    reports only the candidates actually scored, and
+    ``plan.search.pruned`` exposes the pruned-tuple count either way.
+
     If ``policy`` is given (gid -> "row"/"frame"), the optimizer is
     skipped and the policy is compiled verbatim -- this is how the all-row
     baseline and ablation plans are built; feasibility is still computed
@@ -150,7 +163,8 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
                         batch_size=batch_size, replay=replay,
                         max_retries=max_retries,
                         task_deadline_s=task_deadline_s,
-                        resume_dir=resume_dir, guard=guard)
+                        resume_dir=resume_dir, guard=guard,
+                        prune=prune, count_pruned=count_pruned)
         cand = result.best
         alloc = cand.alloc
     else:

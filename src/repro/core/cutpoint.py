@@ -88,9 +88,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.allocator import (Allocation, Policy, allocate, alloc_step,
-                                  frame_feasible, graph_steps,
-                                  init_alloc_state, spill_is_long_path)
+from repro.core.allocator import (Allocation, Policy, alloc_bound_terms,
+                                  allocate, alloc_step, frame_feasible,
+                                  graph_steps, init_alloc_state,
+                                  spill_is_long_path)
 from repro.core.dram import (dram_fm_fast, dram_fm_fast_batch, dram_report,
                              dram_tables)
 from repro.core.grouping import GroupedGraph
@@ -209,6 +210,15 @@ class SearchResult:
     # the bit-identity contract (same cuts/metrics/evaluated regardless
     # of what the run survived).
     events: list = field(default_factory=list)
+    # Candidates eliminated by branch-and-bound pruning without being
+    # scored (see branch_bound_subspace).  The argmin and its metrics are
+    # bit-identical whether or not pruning ran; with the default
+    # ``count_pruned=True`` accounting, ``evaluated`` includes these (so
+    # it equals the full enumeration count exactly).  The split between
+    # scored and pruned -- this field -- legitimately varies with worker
+    # count and scheduling (later tasks inherit a better incumbent), so
+    # like ``events`` it is excluded from the bit-identity contract.
+    pruned: int = 0
 
 
 def evaluate(gg: GroupedGraph, blocks: list[Block], runs: list[list[int]],
@@ -327,6 +337,11 @@ class CutpointEngine:
         self._scratch = init_alloc_state(gg, lean=True)
         self._bram_memo: dict = {}
         self._cur: tuple[int, ...] | None = None
+        # how many leading runs of _cur are actually materialized in the
+        # scratch state / frame mask / extraction accumulators: full
+        # replays set len(runs), prefix replays (prefix_bound) set their
+        # depth, and checkpoints are only trusted up to this length
+        self._cur_len = 0
         self._cache: dict[tuple[int, ...], CandidateMetrics] = {}
         self.evaluations = 0              # cache misses (actual replays)
         # per-group (run index, block position, direction) -- the whole
@@ -344,10 +359,34 @@ class CutpointEngine:
         self._run_of = run_of
         self._pos_of = pos_of
         self._dir_neg = dir_neg
+        # ------------------------------ branch-and-bound floor tables
+        # Static per-group completion floors for prefix_bound.  Latency:
+        # a free (suffix) group costs at least min(row latency, frame
+        # latency at zero boundary IO) -- the very IEEE ops of
+        # latency_cycles_fast with io_bytes=0, so elementwise the floor
+        # never exceeds the candidate's actual per-group term.  SRAM:
+        # every suffix compute group contributes one of its eq. (4)
+        # candidates to out_buff, so at least min(out_frame, out_row);
+        # _sfx_minout[p] is the max of that floor over gids >= p.
+        lt = self._lt
+        bpc = hw.dram_bytes_per_cycle
+        frame_floor = (np.maximum(lt.comp, lt.weight / bpc)
+                       + hw.group_overhead_cycles)
+        self._lat_floor = np.where(lt.side, lt.comp,
+                                   np.minimum(lt.row, frame_floor))
+        self._lat_lb = np.empty(n)        # reused per-bound scratch row
+        st = self._st
+        minout = np.where(st.compute,
+                          np.minimum(st.out_frame, st.out_row), 0)
+        sfx = [0] * (n + 1)
+        for g in range(n - 1, -1, -1):
+            sfx[g] = max(sfx[g + 1], int(minout[g]))
+        self._sfx_minout = sfx
 
     def _replay(self, cuts: tuple[int, ...],
-                rd: int | None = None) -> Allocation:
-        """Materialize the allocation for ``cuts``.
+                rd: int | None = None,
+                rend: int | None = None) -> Allocation:
+        """Materialize the allocation for ``cuts`` (or a prefix of it).
 
         Finds the longest prefix of runs whose cuts match the engine's
         current tuple (callers that know it -- ``score_batch`` computes
@@ -361,24 +400,44 @@ class CutpointEngine:
         prefix exactly once.  On return, ``self._frame`` holds the
         candidate's frame mask; the returned Allocation is the scratch
         state's and is only valid until the next replay -- callers must
-        extract what they need immediately."""
+        extract what they need immediately.
+
+        ``rend`` stops the replay after run ``rend - 1`` (default: all
+        runs), leaving the scratch state, frame mask (up to the prefix's
+        last gid) and extraction accumulators describing exactly the
+        cut prefix ``cuts[:rend]`` -- this is what ``prefix_bound``
+        evaluates its completion floors from.  A prefix replay writes
+        the entering-run checkpoint at ``rend`` so sibling prefixes and
+        surviving completions replay only what they change; when the
+        requested prefix is already materialized (checkpoint match) the
+        state is reset from the checkpoint with no replay at all."""
         runs = self.runs
         nr = len(runs)
+        if rend is None:
+            rend = nr
         if rd is None:
-            # longest prefix of runs whose cuts are unchanged
+            # longest prefix of runs whose cuts are unchanged; only the
+            # materialized prefix of _cur (and its checkpoints) may be
+            # trusted after a prefix replay
             cur = self._cur
             if cur is None:
                 rd = 0
             else:
-                rd = nr
-                for r in range(nr):
+                limit = self._cur_len
+                rd = limit
+                for r in range(limit):
                     if cuts[r] != cur[r]:
                         rd = r
                         break
-                if rd >= nr and nr:
-                    # identical tuple re-evaluated without a cache hit
-                    # (e.g. memoize=False): replay the last run
-                    rd = nr - 1
+                if rd >= rend:
+                    if rend == nr and nr:
+                        # identical tuple re-evaluated without a cache hit
+                        # (e.g. memoize=False): replay the last run
+                        rd = nr - 1
+                    else:
+                        # prefix already materialized: reset to its
+                        # checkpoint, replay nothing
+                        rd = rend
         # reset the scratch state to checkpoint rd in place, reusing its
         # containers (lean states: the journals are already drained and
         # the assignment maps stay empty, so neither needs touching)
@@ -416,7 +475,7 @@ class CutpointEngine:
         outsz = self._outsz
         wr_cand = self._wr_cand
         ok = self._spill_ok
-        for r in range(rd, nr):
+        for r in range(rd, rend):
             if r > rd:
                 ckpts[r] = state.clone()
                 xcache[r] = (list(x_io), bfm, wrf, feas)
@@ -460,7 +519,14 @@ class CutpointEngine:
                     if not sv:
                         feas = False
                 del jsp[:]
+        if rend < nr and rd < rend:
+            # trailing entering-run checkpoint of a prefix replay, so
+            # extensions (deeper bounds, surviving completions) resume
+            # here instead of re-walking the prefix
+            ckpts[rend] = state.clone()
+            xcache[rend] = (list(x_io), bfm, wrf, feas)
         self._cur = cuts
+        self._cur_len = rend
         self._x_bfm = bfm
         self._x_wrf = wrf
         self._x_feas = feas
@@ -514,6 +580,86 @@ class CutpointEngine:
             self._cache[cuts] = m
         return m
 
+    # ------------------------------------------------- branch-and-bound
+    def prefix_bound(self, cuts: tuple[int, ...], depth: int,
+                     objective: str):
+        """Admissible lower bound on the primary objective term over
+        *every* completion of the cut prefix ``cuts[:depth]``.
+
+        The bound is the exact prefix cost plus a nonnegative completion
+        floor, both read off the checkpointed prefix replay:
+
+        * **latency** -- prefix groups are priced with the exact per-group
+          model at the *current* boundary-IO accumulator (``_x_io`` only
+          grows as later runs allocate, and the frame-mode term is IEEE-
+          monotone in io bytes); suffix groups take the static
+          ``_lat_floor`` (min of row latency and zero-IO frame latency).
+          The per-group floors are summed left-to-right in gid order --
+          the same association as ``latency_cycles_fast`` -- so IEEE
+          monotone addition keeps the total a true lower bound.
+        * **sram** -- the replayed buffer maxima (monotone, see
+          ``allocator.alloc_bound_terms``), the prefix's eq. (1)/(4)/(5)
+          masked maxima, the running frame-write max ``_x_wrf``
+          (monotone) and the static suffix out-buffer floor
+          ``_sfx_minout``.  Integer-exact.
+        * **dram** -- the prefix's masked row-traffic sum plus the
+          running boundary/spill byte total ``_x_bfm`` (monotone) plus
+          the constant weight traffic.  Integer-exact.
+
+        Feasibility is assumed optimistically and the tie-break
+        (secondary) term is floored at zero, so the pruner's bound key
+        ``(False, lb, 0)`` never exceeds any completion's ``_key``.  At
+        ``depth == len(runs)`` the bound equals the candidate's exact
+        primary metric (the completion is unique) -- the differential
+        gate in analysis/mutate.py kills deflated-bound mutations
+        against exactly this property.
+
+        Leaves the engine holding the prefix replay (``_cur_len ==
+        depth``); full replays afterwards resume from its checkpoints.
+        """
+        nr = len(self.runs)
+        if not 0 < depth <= nr:
+            raise ValueError(f"prefix_bound depth {depth} outside "
+                             f"1..{nr}")
+        self._replay(cuts, rend=depth)
+        pend = self.run_span[depth - 1][1]      # gids < pend are fixed
+        frame = self._frame
+        if objective == "latency":
+            lt = self._lt
+            hw = self.hw
+            per = self._lat_lb
+            per[:] = self._lat_floor
+            io = np.asarray(self._x_io[:pend], dtype=np.float64)
+            mem = (lt.weight[:pend] + io) / hw.dram_bytes_per_cycle
+            frame_lat = (np.maximum(lt.comp[:pend], mem)
+                         + hw.group_overhead_cycles)
+            per[:pend] = np.where(lt.side[:pend], lt.comp[:pend],
+                                  np.where(frame[:pend], frame_lat,
+                                           lt.row[:pend]))
+            # det: left-to-right association of latency_cycles_fast
+            return sum(per.tolist())
+        if objective == "dram":
+            row_pre = int(np.where(frame[:pend], 0,
+                                   self._dt.row_fm[:pend]).sum())
+            return row_pre + self._x_bfm + self._dt.weight_bytes
+        if objective == "sram":
+            st = self._st
+            cm = st.compute[:pend]
+            frm = cm & frame[:pend]
+            rowm = cm & ~frame[:pend]
+            wbuff = int(st.weight[:pend].max(where=rowm, initial=0))
+            outf = int(st.out_frame[:pend].max(where=frm, initial=0))
+            outr = int(st.out_row[:pend].max(where=rowm, initial=0))
+            wrr = int(st.wr_row[:pend].max(where=rowm, initial=0))
+            b0, b1, b2, side = alloc_bound_terms(self._scratch)
+            if wbuff > b1:
+                b1 = wbuff
+            out_lb = max(outf, outr, self._sfx_minout[pend])
+            write_lb = max(wrr, self._x_wrf)
+            return (st.row_buff + out_lb + write_lb
+                    + b0 + b1 + b2 + side)
+        raise ValueError(objective)
+
     # ------------------------------------------------------- device replay
     def _frame_matrix(self, tuples: list) -> np.ndarray:
         """B x G frame-mask matrix straight from the cut tuples.
@@ -532,19 +678,23 @@ class CutpointEngine:
         pos = self._pos_of[None, :]
         return np.where(self._dir_neg[None, :], pos >= cut, pos < cut)
 
-    def _device_replay(self, frame: np.ndarray):
+    def _device_replay(self, frame: np.ndarray, skip=None):
         """Tensorized allocator replay of a whole frame-mask batch
-        (kernels/alloc_scan.py) under ``self.alloc_backend``."""
+        (kernels/alloc_scan.py) under ``self.alloc_backend``.  ``skip``
+        masks pruned batch lanes out of the scan (their outputs come
+        back zero-filled)."""
         if self._at is None:
             from repro.kernels.alloc_scan import pack_alloc_tables
             self._at = pack_alloc_tables(self.gg, self.hw)
         from repro.kernels.alloc_scan import alloc_scan
-        return alloc_scan(self._at, frame, backend=self.alloc_backend)
+        return alloc_scan(self._at, frame, backend=self.alloc_backend,
+                          skip=skip)
 
     # ------------------------------------------------------ batched scoring
     def score_batch(self, cuts_batch, memoize: bool = True,
                     backend: str | None = None,
-                    replay: str | None = None) -> list[CandidateMetrics]:
+                    replay: str | None = None,
+                    skip=None) -> list:
         """Metrics for a batch of B cut tuples in one set of 2-D reductions.
 
         The batch is expanded into a B x G frame-mask matrix plus a B x G
@@ -570,6 +720,16 @@ class CutpointEngine:
         bit-exact contract on the same engine instance is preserved
         (cached exact entries are still served to pallas callers).
 
+        ``skip`` (a length-B boolean mask, ``memoize=False`` only) marks
+        batch lanes the caller has already pruned: the branch-and-bound
+        walk (``branch_bound_subspace``) enqueues leaves batch-by-batch
+        and the incumbent may improve before a batch flushes, so lanes
+        whose recorded bound now exceeds the incumbent are skipped
+        *before* any journal or device replay.  Skipped lanes return
+        ``None``, are never replayed, and do not count toward
+        ``evaluations``; surviving lanes are bit-identical to an
+        unmasked call.
+
         ``replay`` selects how the per-candidate allocator quantities are
         produced: ``"journal"`` (default) is the checkpointed Python
         replay above; ``"device"`` builds the frame-mask matrix directly
@@ -588,6 +748,9 @@ class CutpointEngine:
             replay = self.replay
         if replay not in ("journal", "device"):
             raise ValueError(f"unknown score_batch replay: {replay!r}")
+        if skip is not None and memoize:
+            raise ValueError("score_batch: skip requires memoize=False "
+                             "(pruned lanes must not poison the memo)")
         cuts_batch = list(cuts_batch)
         out: list[CandidateMetrics | None] = [None] * len(cuts_batch)
         slots: list[tuple[int, int]] = []      # (batch index, miss index)
@@ -620,8 +783,15 @@ class CutpointEngine:
             # CandidateMetrics (and the memo) are byte-identical to the
             # journal path's.
             frame = self._frame_matrix(miss)
-            res = self._device_replay(frame)
-            self.evaluations += len(miss)
+            res = self._device_replay(frame, skip=skip)
+            if skip is None:
+                self.evaluations += len(miss)
+            else:
+                self.evaluations += len(miss) - sum(map(bool, skip))
+                # pruned lanes must not contribute row-mode DRAM/latency
+                # terms in the 2-D reductions below (their metrics are
+                # discarded, but keep them finite and cheap)
+                frame[np.asarray(skip, dtype=bool)] = True
             io = res.io.astype(np.float64)
             boundary_fm = res.bfm.tolist()
             feas_spills = res.feasible.tolist()
@@ -631,15 +801,21 @@ class CutpointEngine:
                                              res.wrf.tolist())]
         else:
             # --- vectorized shared-prefix lengths: rd[j] = first run
-            # whose cut differs from miss[j-1] (the engine replays the
-            # batch in order, so the previous miss *is* the engine's
-            # current tuple); miss[0] compares against the engine's real
-            # current tuple inside _replay.
+            # whose cut differs from the *previously replayed* miss (the
+            # engine replays the batch in order, so the previous replayed
+            # miss *is* the engine's current tuple); the first replayed
+            # miss compares against the engine's real current tuple
+            # inside _replay.  With a skip mask the chain runs over the
+            # surviving subsequence only -- a skipped lane never becomes
+            # the engine's current tuple, so comparing across it would
+            # desynchronize the checkpoints.
             nr = len(self.runs)
-            if len(miss) > 1 and nr:
-                arr = np.fromiter(itertools.chain.from_iterable(miss),
+            todo = (miss if skip is None
+                    else [c for c, s in zip(miss, skip) if not s])
+            if len(todo) > 1 and nr:
+                arr = np.fromiter(itertools.chain.from_iterable(todo),
                                   dtype=np.int64,
-                                  count=len(miss) * nr).reshape(len(miss),
+                                  count=len(todo) * nr).reshape(len(todo),
                                                                 nr)
                 neq = arr[1:] != arr[:-1]
                 rds = np.where(neq.any(axis=1), neq.argmax(axis=1),
@@ -647,10 +823,11 @@ class CutpointEngine:
             else:
                 rds = []
 
-            # --- replay each distinct miss; the incremental extraction
-            # state (self._x_*) holds the candidate-dependent scalars
-            # afterwards, so the per-candidate work here is four
-            # row/scalar copies
+            # --- replay each distinct surviving miss; the incremental
+            # extraction state (self._x_*) holds the candidate-dependent
+            # scalars afterwards, so the per-candidate work here is four
+            # row/scalar copies.  Skipped lanes keep zero rows (their
+            # assembled metrics are never read).
             n = len(self.gg.groups)
             frame = np.zeros((len(miss), n), dtype=bool)
             io_rows: list[list] = []             # per-candidate io vectors
@@ -660,9 +837,19 @@ class CutpointEngine:
             _replay = self._replay
             my_frame = self._frame
             x_io = self._x_io
+            zero_row = [0] * n
+            zero_terms = (0, 0, 0, 0, 0)
+            ti = 0                               # index into todo/rds
             for j, cuts in enumerate(miss):
+                if skip is not None and skip[j]:
+                    io_rows.append(zero_row)
+                    cand_terms.append(zero_terms)
+                    boundary_fm.append(0)
+                    feas_spills.append(True)
+                    continue
                 self.evaluations += 1
-                alloc = _replay(cuts, rds[j - 1] if j else None)
+                alloc = _replay(cuts, rds[ti - 1] if ti else None)
+                ti += 1
                 frame[j] = my_frame
                 io_rows.append(list(x_io))
                 b = alloc.buff
@@ -702,8 +889,11 @@ class CutpointEngine:
         wb = self._dt.weight_bytes
         store = memoize and backend == "numpy"
         cache = self._cache
-        scored: list[CandidateMetrics] = []
+        scored: list[CandidateMetrics | None] = []
         for j, cuts in enumerate(miss):
+            if skip is not None and skip[j]:
+                scored.append(None)
+                continue
             fm_j = fm[j]
             sram_j = sram[j]
             m = CandidateMetrics(
@@ -734,6 +924,142 @@ EXHAUSTIVE_LIMIT = 8_000_000
 # reductions across the batch (the win saturates around a few hundred),
 # small enough that the B x G mask/IO matrices stay cache-resident.
 DEFAULT_BATCH_SIZE = 1024
+
+# Smallest subtree (number of completions under a shared cut prefix) worth
+# a ``prefix_bound`` call: a bound costs roughly one checkpointed run
+# replay plus a handful of masked reductions -- a few candidate scorings
+# -- so bounding tiny subtrees loses even when every one of them prunes.
+PRUNE_MIN_SUBTREE = 16
+
+
+def branch_bound_subspace(engine: "CutpointEngine",
+                          prefix: tuple[int, ...],
+                          suffix_dims,
+                          objective: str,
+                          batch_size: int = DEFAULT_BATCH_SIZE,
+                          incumbent_key=None,
+                          prune: bool = True,
+                          prune_min_subtree: int = PRUNE_MIN_SUBTREE):
+    """Argmin over ``prefix x product(range(d + 1) for d in suffix_dims)``
+    with exact branch-and-bound pruning.
+
+    Returns ``(best, pruned)``: ``best`` is the first product-order
+    optimum among scored candidates as a :class:`CandidateMetrics`
+    (``None`` iff every completion was pruned -- only possible when an
+    external ``incumbent_key`` already beats the whole sub-space), and
+    ``pruned`` counts candidates eliminated without scoring.
+
+    The walk is depth-first in ``itertools.product`` order.  At each
+    internal node (a shared cut prefix) whose subtree holds at least
+    ``prune_min_subtree`` completions, ``engine.prefix_bound`` prices the
+    prefix; a bound key strictly above the incumbent kills the whole
+    subtree, *before* any journal or device replay of its tuples.  The
+    incumbent is the min of ``incumbent_key`` (best-so-far inherited from
+    the :class:`~repro.core.search_pool.ParallelSearchDriver` result
+    stream) and the best candidate scored here.  Leaves are flushed
+    through ``score_batch`` in ``batch_size`` chunks; because the
+    incumbent can improve between enqueue and flush, each leaf remembers
+    its deepest ancestor bound and the flush passes a ``skip`` mask for
+    lanes that became prunable late -- so pruning composes with the
+    batched scorer and the device replay instead of fighting them.
+
+    Exactness (the repo's standing invariant): the bound is admissible
+    (``prefix_bound``) and pruning requires *strictly* exceeding the
+    incumbent, while every incumbent is a real candidate's key.  The
+    product-order argmin -- the first tuple attaining the optimal key,
+    which is also the ``(key, cuts)``-lexicographic optimum the parallel
+    merge selects -- therefore can never be pruned: every ancestor bound
+    of it is <= its own key <= every incumbent ever formed.  So the
+    returned argmin and its metrics are bit-identical to the unpruned
+    enumeration, for any incumbent timing, worker count, or resume
+    schedule.  With ``prune=False`` the walk degenerates to exactly the
+    chunked exhaustive enumeration (same ``score_batch`` calls in the
+    same order, same ``engine.evaluations``).
+    """
+    nr = len(engine.runs)
+    nr_pre = len(prefix)
+    dims = [d + 1 for d in suffix_dims]
+    nd = len(dims)
+    ranges = [range(d) for d in dims]
+    # subtree[j] = completions below a node with j suffix coords fixed
+    subtree = [1] * (nd + 1)
+    for j in range(nd - 1, -1, -1):
+        subtree[j] = subtree[j + 1] * dims[j]
+    # levels at or below which no bound check can fire -- their subtrees
+    # enumerate in C through itertools.product instead of recursing
+    can_check = [False] * (nd + 1)
+    for j in range(nd - 1, -1, -1):
+        here = (subtree[j + 1] >= prune_min_subtree
+                and nr_pre + j + 1 < nr)
+        can_check[j] = here or can_check[j + 1]
+
+    best = None
+    best_key = None
+    inc = incumbent_key
+    pruned = 0
+    pend_t: list[tuple[int, ...]] = []
+    pend_b: list = []               # deepest ancestor bound key per leaf
+    bs = max(1, batch_size)
+
+    def flush() -> None:
+        nonlocal best, best_key, inc, pruned
+        if not pend_t:
+            return
+        skip = None
+        if prune and inc is not None:
+            sk = [b is not None and b > inc for b in pend_b]
+            n_skip = sum(sk)
+            if n_skip:
+                skip = sk
+                pruned += n_skip
+        for c in engine.score_batch(pend_t, memoize=False, skip=skip):
+            if c is None:
+                continue
+            k = _key(c, objective)
+            if best is None or k < best_key:
+                best, best_key = c, k
+                if inc is None or k < inc:
+                    inc = k
+        pend_t.clear()
+        pend_b.clear()
+
+    def enqueue_all(j: int, node: tuple[int, ...], bkey) -> None:
+        # no bound can fire below this node: C-speed product enumeration
+        for suffix in itertools.product(*ranges[j:]):
+            pend_t.append(node + suffix)
+            pend_b.append(bkey)
+            if len(pend_t) >= bs:
+                flush()
+
+    def walk(j: int, node: tuple[int, ...], bkey) -> None:
+        nonlocal pruned
+        if j == nd:
+            pend_t.append(node)
+            pend_b.append(bkey)
+            if len(pend_t) >= bs:
+                flush()
+            return
+        if not prune or not can_check[j]:
+            enqueue_all(j, node, bkey)
+            return
+        sub = subtree[j + 1]
+        depth = nr_pre + j + 1
+        check = sub >= prune_min_subtree and depth < nr
+        for v in ranges[j]:
+            child = node + (v,)
+            ck = bkey
+            if check and inc is not None:
+                lb = engine.prefix_bound(
+                    child + (0,) * (nr - len(child)), depth, objective)
+                ck = (False, lb, 0)
+                if ck > inc:
+                    pruned += sub
+                    continue
+            walk(j + 1, child, ck)
+
+    walk(0, tuple(prefix), None)
+    flush()
+    return best, pruned
 
 
 def coordinate_descent(engine: "CutpointEngine", start: tuple[int, ...],
@@ -811,7 +1137,9 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
            max_retries: int = 2,
            task_deadline_s: float | None = None,
            resume_dir=None,
-           guard=None) -> SearchResult:
+           guard=None,
+           prune: bool = True,
+           count_pruned: bool = True) -> SearchResult:
     """Find the best cut tuple for ``gg`` on ``hw``.
 
     Knobs
@@ -865,6 +1193,25 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
         A :class:`repro.runtime.fault_tolerance.PreemptionGuard` the
         pool polls for clean SIGTERM drain
         (:class:`repro.core.search_pool.SearchPreempted`).
+    prune:
+        ``True`` (default) runs the exhaustive enumeration as exact
+        branch-and-bound (:func:`branch_bound_subspace`): sub-spaces
+        whose admissible prefix bound exceeds the incumbent are
+        eliminated before any replay.  The argmin cut and its metrics
+        are bit-identical to the unpruned search -- always -- and
+        ``SearchResult.pruned`` reports how much of the space was cut
+        away.  Coordinate descent is unaffected (a pruned trial could
+        never win its strict ``<`` improvement test, so there is
+        nothing to prune).
+    count_pruned:
+        ``True`` (default) keeps full-enumeration accounting:
+        ``evaluated`` counts pruned candidates as evaluated (scored +
+        pruned == the enumeration count with ``prune=False``), so
+        ``evaluated`` stays deterministic and identical across
+        ``prune``/``workers``/``batch_size``/``replay``.  ``False``
+        reports only actually-scored candidates -- under parallel
+        pruning that count legitimately varies with scheduling (later
+        tasks inherit better incumbents and score less).
 
     Returns a :class:`SearchResult` whose ``best`` Candidate is
     materialized through the direct oracle, so it is exactly what the
@@ -879,7 +1226,8 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
             return driver.search(gg, hw, objective=objective,
                                  exhaustive_limit=exhaustive_limit,
                                  batch_size=batch_size, replay=replay,
-                                 resume_dir=resume_dir)
+                                 resume_dir=resume_dir, prune=prune,
+                                 count_pruned=count_pruned)
 
     blocks = split_blocks(gg)
     runs = monotone_runs(blocks)
@@ -889,16 +1237,20 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
 
     engine = CutpointEngine(gg, hw, blocks, runs, replay=replay)
 
-    def materialize(best: CandidateMetrics) -> SearchResult:
+    def materialize(best: CandidateMetrics,
+                    pruned: int = 0) -> SearchResult:
         # Re-run the winner through the direct oracle so the returned
         # Candidate (policy, alloc, metrics) is exactly what the direct
         # search would have produced.
         cand = evaluate(gg, blocks, runs, best.cuts, hw)
-        return SearchResult(best=cand, evaluated=engine.evaluations,
-                            runs=runs, blocks=blocks)
+        evaluated = engine.evaluations
+        if count_pruned:
+            evaluated += pruned
+        return SearchResult(best=cand, evaluated=evaluated,
+                            runs=runs, blocks=blocks, pruned=pruned)
 
     if space <= exhaustive_limit:
-        if space > 1_000_000:
+        if space > 1_000_000 and not prune:
             warnings.warn(
                 f"exhaustive cut search over {space} tuples on a single "
                 f"core (~{space / 40_000 / 60:.0f} min); pass workers=N to "
@@ -906,25 +1258,14 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
                 f"1/N the time, or lower exhaustive_limit to fall back to "
                 f"coordinate descent", RuntimeWarning, stacklevel=2)
         # product order: the last run varies fastest, so consecutive tuples
-        # share the longest possible checkpoint prefix
-        tuples = itertools.product(*[range(len(r) + 1) for r in runs])
-        best: CandidateMetrics | None = None
-        if batch_size > 1:
-            while True:
-                chunk = list(itertools.islice(tuples, batch_size))
-                if not chunk:
-                    break
-                for c in engine.score_batch(chunk, memoize=False):
-                    if best is None or _key(c, objective) < _key(best,
-                                                                 objective):
-                        best = c
-        else:
-            for cuts in tuples:
-                c = engine.evaluate(cuts, memoize=False)
-                if best is None or _key(c, objective) < _key(best, objective):
-                    best = c
-        assert best is not None
-        return materialize(best)
+        # share the longest possible checkpoint prefix; with prune=True
+        # whole sub-spaces fall to the incumbent bound instead of being
+        # walked at all
+        best, pruned = branch_bound_subspace(
+            engine, (), [len(r) for r in runs], objective,
+            batch_size=batch_size, prune=prune)
+        assert best is not None     # no external incumbent: never all-pruned
+        return materialize(best, pruned)
 
     # Coordinate descent with deterministic restarts (descent_starts).
     # Move order matches the seed implementation exactly (same trajectory,

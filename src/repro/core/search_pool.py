@@ -192,38 +192,32 @@ def _maybe_fail(key, attempt: int = 0) -> None:
 def _run_subspace(task, attempt: int = 0):
     """Evaluate ``prefix x product(suffix_dims)``.
 
-    Returns ``(argmin CandidateMetrics, #evals, worker events)``.  Ties
-    keep the first optimum in product order, as serial search does.
-    ``batch_size > 1`` walks the sub-space in ``score_batch`` chunks (the
-    production path); the argmin and the evaluation count are identical
-    either way.  A failing device replay degrades to the journal replay
-    in-task (bit-identical by contract) and reports a ``device_fallback``
-    event instead of failing the task.
+    Returns ``(argmin CandidateMetrics, #evals, #pruned, worker
+    events)``.  Ties keep the first optimum in product order, as serial
+    search does.  ``batch_size > 1`` walks the sub-space in
+    ``score_batch`` chunks (the production path); the argmin and the
+    evaluation count are identical either way.  With ``prune`` on (task
+    field 8) and an inherited incumbent key (field 9), whole sub-trees
+    whose admissible bound exceeds the incumbent are skipped before any
+    replay; the argmin is ``None`` only when the *entire* task falls to
+    the incumbent, which is safe because the global optimum's own task
+    can never prune it (its bound never exceeds any incumbent).  A
+    failing device replay degrades to the journal replay in-task
+    (bit-identical by contract) and reports a ``device_fallback`` event
+    instead of failing the task.
     """
-    token, payload, prefix, suffix_dims, objective, batch_size, replay = task
+    token, payload, prefix, suffix_dims, objective, batch_size, replay = \
+        task[:7]
+    prune = task[7] if len(task) > 7 else False
+    incumbent = task[8] if len(task) > 8 else None
     _maybe_fail(prefix, attempt)
 
     def score(engine):
         before = engine.evaluations
-        best = None
-        tuples = (prefix + suffix for suffix in
-                  itertools.product(*[range(d + 1) for d in suffix_dims]))
-        if batch_size > 1:
-            while True:
-                chunk = list(itertools.islice(tuples, batch_size))
-                if not chunk:
-                    break
-                for c in engine.score_batch(chunk, memoize=False):
-                    if best is None or (_cp._key(c, objective)
-                                        < _cp._key(best, objective)):
-                        best = c
-        else:
-            for cuts in tuples:
-                c = engine.evaluate(cuts, memoize=False)
-                if best is None or (_cp._key(c, objective)
-                                    < _cp._key(best, objective)):
-                    best = c
-        return best, engine.evaluations - before
+        best, pruned = _cp.branch_bound_subspace(
+            engine, prefix, list(suffix_dims), objective,
+            batch_size=batch_size, incumbent_key=incumbent, prune=prune)
+        return best, engine.evaluations - before, pruned
 
     events: tuple = ()
     try:
@@ -231,17 +225,17 @@ def _run_subspace(task, attempt: int = 0):
         if replay == "device":
             # chaos site for injected backend failures (tests/benchmarks)
             _chaos.maybe_fire("device", prefix, attempt)
-        best, n = score(engine)
+        best, n, pruned = score(engine)
     except Exception as e:
         if replay != "device":
             raise
         # device backend raised: degrade to the journal replay -- logged,
         # never silent, and bit-identical by the replay contract
         engine = _worker_engine(token, payload, "journal")
-        best, n = score(engine)
+        best, n, pruned = score(engine)
         events = (("device_fallback", f"device replay failed ({e!r}); "
                    f"journal replay substituted"),)
-    return best, n, events
+    return best, n, pruned, events
 
 
 def _run_descent(task, attempt: int = 0):
@@ -281,8 +275,9 @@ def _run_descent(task, attempt: int = 0):
 
 def _degrade_subspace(task):
     """Straggler duplicates always run the journal replay: if the device
-    backend is what's hanging, the rescue must not hang with it."""
-    return task[:6] + ("journal",)
+    backend is what's hanging, the rescue must not hang with it.  Prune
+    fields (if present) ride along unchanged."""
+    return task[:6] + ("journal",) + task[7:]
 
 
 def _degrade_descent(task):
@@ -291,11 +286,14 @@ def _degrade_descent(task):
 
 # ----------------------------------------------------- journal record codec
 def _encode_subspace(result) -> dict:
-    m, n, _events = result
-    return {"cuts": list(m.cuts), "lat": m.latency_cycles,
-            "dram_total": m.dram_total, "dram_fm": m.dram_fm,
-            "sram": m.sram_total, "bram": m.bram18k,
-            "feasible": bool(m.feasible), "evals": n}
+    m, n, pruned, _events = result
+    rec = {"evals": n, "pruned": pruned}
+    if m is not None:                      # task may be pruned away whole
+        rec.update({"cuts": list(m.cuts), "lat": m.latency_cycles,
+                    "dram_total": m.dram_total, "dram_fm": m.dram_fm,
+                    "sram": m.sram_total, "bram": m.bram18k,
+                    "feasible": bool(m.feasible)})
+    return rec
 
 
 def _decode_metrics(rec: dict) -> "_cp.CandidateMetrics":
@@ -307,13 +305,15 @@ def _decode_metrics(rec: dict) -> "_cp.CandidateMetrics":
 
 
 def _decode_subspace(rec: dict):
-    return _decode_metrics(rec), rec["evals"], ()
+    m = _decode_metrics(rec) if rec.get("cuts") is not None else None
+    return m, rec["evals"], rec.get("pruned", 0), ()
 
 
 def _encode_descent(result) -> dict:
     m, visited, _events = result
-    rec = _encode_subspace((m, 0, ()))
+    rec = _encode_subspace((m, 0, 0, ()))
     del rec["evals"]
+    del rec["pruned"]
     rec["visited"] = sorted(list(t) for t in visited)
     return rec
 
@@ -456,7 +456,8 @@ class ParallelSearchDriver:
         return TaskJournal(resume_dir, h.hexdigest()[:16])
 
     def _run_tasks(self, fn, tasks: list, keys: list, events: list,
-                   journal=None, encode=None, decode=None, degrade=None):
+                   journal=None, encode=None, decode=None, degrade=None,
+                   prepare=None, observe=None):
         """Dispatch ``tasks`` with retry, healing, deadlines, journaling
         and preemption drain; returns worker results in task order.
 
@@ -464,6 +465,18 @@ class ParallelSearchDriver:
         the same value, so journal replays, bounded re-dispatch after a
         pool break, and first-completion-wins duplicate racing all merge
         to the same result as a fault-free run.
+
+        ``prepare``/``observe`` are the incumbent-propagation hooks for
+        branch-and-bound: ``observe(result)`` runs on every completed or
+        journal-resumed result, and ``prepare(task)`` rewrites a task at
+        the moment it is (re-)submitted -- so later-dispatched tasks
+        (and retried/duplicated ones) inherit the best-so-far incumbent.
+        Both hooks may only *tighten* pruning, never change the merged
+        argmin: task results stay pure up to their ``pruned`` count,
+        which is scheduling-dependent by design (like ``events``) and
+        excluded from the bit-identity contract.  Journal keys are
+        computed from ``keys``, not the prepared task, so a resumed run
+        matches records regardless of incumbent timing.
         """
         n = len(tasks)
         results: dict[int, object] = {}
@@ -474,6 +487,8 @@ class ParallelSearchDriver:
                 rec = journal.get(task_keys[i])     # may raise JournalError
                 if rec is not None:
                     results[i] = decode(rec)
+                    if observe is not None:
+                        observe(results[i])
                     events.append(FaultEvent(
                         "resume", task=keys[i],
                         detail="journaled task result reused"))
@@ -494,6 +509,8 @@ class ParallelSearchDriver:
         window = max(1, 2 * self.workers)
 
         def submit(i: int) -> None:
+            if prepare is not None:          # inject the live incumbent at
+                live[i] = prepare(live[i])   # submit time (also on retries)
             try:
                 fut = self._executor().submit(fn, live[i], attempts[i])
             except BrokenProcessPool:        # broke between loop ticks
@@ -509,6 +526,8 @@ class ParallelSearchDriver:
 
         def record(i: int, res, wall: float | None) -> None:
             results[i] = res
+            if observe is not None:
+                observe(res)
             if wall is not None:
                 monitor.observe(wall)
             if journal is not None:
@@ -622,19 +641,30 @@ class ParallelSearchDriver:
                min_parallel_space: int = MIN_PARALLEL_SPACE,
                batch_size: int | None = None,
                replay: str = "journal",
-               resume_dir=None):
+               resume_dir=None,
+               prune: bool = True,
+               count_pruned: bool = True):
         """Parallel ``cutpoint.search``, bit-identical to the serial result.
 
         Same knobs as :func:`repro.core.cutpoint.search` (including
         ``batch_size``, which each worker forwards to
-        ``CutpointEngine.score_batch`` over its own sub-space, and
-        ``replay``, which selects the journal vs device allocator replay
-        inside each worker's engine); additionally ``min_parallel_space``
+        ``CutpointEngine.score_batch`` over its own sub-space, ``replay``,
+        which selects the journal vs device allocator replay inside each
+        worker's engine, and the branch-and-bound ``prune`` /
+        ``count_pruned`` pair); additionally ``min_parallel_space``
         sets the space size below which the serial path runs directly
         (the result is identical either way -- this is purely a
         fixed-cost cutoff), and ``resume_dir`` opens the task journal for
         checkpointed resume (which also forces the partitioned path, so
         every task is journaled even on small spaces).
+
+        With ``prune`` on, completed task results feed a shared incumbent
+        (the best objective key seen so far); tasks dispatched later
+        inherit it, so the parallel search prunes *across* sub-spaces,
+        not just within them.  The merged argmin, metrics, and (under
+        ``count_pruned``) ``evaluated`` are still bit-identical to the
+        unpruned serial search -- only ``SearchResult.pruned`` varies
+        with scheduling.
         """
         if exhaustive_limit is None:
             exhaustive_limit = _cp.EXHAUSTIVE_LIMIT
@@ -651,7 +681,8 @@ class ParallelSearchDriver:
         if not runs or (serial_ok and resume_dir is None):
             return _cp.search(gg, hw, objective=objective,
                               exhaustive_limit=exhaustive_limit,
-                              batch_size=batch_size, replay=replay)
+                              batch_size=batch_size, replay=replay,
+                              prune=prune, count_pruned=count_pruned)
 
         if exhaustive:
             prefixes, suffix_dims = partition_space(
@@ -659,7 +690,8 @@ class ParallelSearchDriver:
             return self.run_subspaces(
                 gg, hw, prefixes, suffix_dims, objective=objective,
                 batch_size=batch_size, replay=replay,
-                resume_dir=resume_dir, blocks=blocks, runs=runs)
+                resume_dir=resume_dir, blocks=blocks, runs=runs,
+                prune=prune, count_pruned=count_pruned)
 
         starts = _cp.descent_starts(blocks, runs)
         self._searches += 1
@@ -693,7 +725,9 @@ class ParallelSearchDriver:
                       objective: str = "latency",
                       batch_size: int | None = None,
                       replay: str = "journal",
-                      resume_dir=None, blocks=None, runs=None):
+                      resume_dir=None, blocks=None, runs=None,
+                      prune: bool = True,
+                      count_pruned: bool = True):
         """Fault-tolerant exhaustive search over an explicit partition.
 
         ``search`` delegates the full-space exhaustive path here;
@@ -718,19 +752,53 @@ class ParallelSearchDriver:
                 resume_dir, payload, objective, "exhaustive",
                 (tuple(suffix_dims), tuple(prefixes)))
         tasks = [(token, payload, p, tuple(suffix_dims), objective,
-                  batch_size, replay) for p in prefixes]
+                  batch_size, replay, prune, None) for p in prefixes]
+        # Incumbent propagation: every completed (or journal-resumed) task
+        # result tightens a shared best-so-far key; tasks submitted after
+        # that inherit it via ``prepare`` and can prune against it from
+        # their first batch.  Monotone tightening only -- the argmin's own
+        # task can never be pruned by any incumbent, so the merge below is
+        # unchanged regardless of completion order.
+        inc_box: list = [None]
+
+        def _observe(res) -> None:
+            m = res[0]
+            if m is not None:
+                k = _cp._key(m, objective)
+                if inc_box[0] is None or k < inc_box[0]:
+                    inc_box[0] = k
+
+        def _prepare(task):
+            if inc_box[0] is None:
+                return task
+            return task[:8] + (inc_box[0],)
+
         results = self._run_tasks(
             _run_subspace, tasks, keys=list(prefixes), events=events,
             journal=journal, encode=_encode_subspace,
-            decode=_decode_subspace, degrade=_degrade_subspace)
+            decode=_decode_subspace, degrade=_degrade_subspace,
+            prepare=_prepare if prune else None,
+            observe=_observe if prune else None)
         evaluated = 0
-        for prefix, (_m, nev, wev) in zip(prefixes, results):
+        pruned_total = 0
+        for prefix, (_m, nev, npr, wev) in zip(prefixes, results):
             evaluated += nev
+            pruned_total += npr
             for kind, detail in wev:
                 events.append(FaultEvent(kind, task=prefix, detail=detail))
+        if count_pruned:
+            # scored + pruned per task == the task's tuple count, so the
+            # sum is the full enumeration count the unpruned search
+            # reports -- deterministic even though the split is not
+            evaluated += pruned_total
         # (objective key, cut tuple) == first optimum in product order.
-        best = min((m for m, _n, _e in results),
+        # Fully-pruned tasks contribute no candidate; at least one task
+        # (the one owning the global optimum) always survives.
+        survivors = [m for m, _n, _p, _e in results if m is not None]
+        assert survivors, "every sub-space pruned: bound/incumbent bug"
+        best = min(survivors,
                    key=lambda m: (_cp._key(m, objective), m.cuts))
         cand = _cp.evaluate(gg, blocks, runs, best.cuts, hw)
         return _cp.SearchResult(best=cand, evaluated=evaluated,
-                                runs=runs, blocks=blocks, events=events)
+                                runs=runs, blocks=blocks, events=events,
+                                pruned=pruned_total)

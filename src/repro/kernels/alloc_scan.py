@@ -743,12 +743,53 @@ else:                                      # pragma: no cover - jax baked in
 
 def alloc_scan(t: AllocScanTables, frame: np.ndarray,
                backend: str = "reference",
-               interpret: bool | None = None) -> AllocScanResult:
+               interpret: bool | None = None,
+               skip: np.ndarray | None = None) -> AllocScanResult:
     """Run the tensorized allocator replay for a B x G frame-mask batch.
 
     ``backend`` selects the implementation -- ``"reference"`` (numpy,
     default), ``"scan"`` (``jax.lax.scan``) or ``"pallas"`` -- all three
-    bit-identical on integer outputs (tests/test_alloc_scan.py)."""
+    bit-identical on integer outputs (tests/test_alloc_scan.py).
+
+    ``skip`` (optional, bool (B,)) masks out batch lanes pruned by the
+    branch-and-bound search before any replay work: skipped rows are
+    compressed away, the surviving sub-batch runs through the selected
+    backend unchanged, and the outputs are scattered back into
+    zero-filled full-width arrays (``feasible`` defaults ``True`` on
+    skipped lanes so downstream masking stays inert).  The surviving
+    rows are bit-identical to an unskipped call on the same sub-batch."""
+    if skip is not None:
+        skip = np.asarray(skip, dtype=bool)
+        b = frame.shape[0]
+        if skip.shape != (b,):
+            raise ValueError(
+                f"skip mask shape {skip.shape} != batch ({b},)")
+        n = t.n
+        if skip.all():
+            return AllocScanResult(
+                io=np.zeros((b, n), np.int64),
+                buff=np.zeros((b, NUM_BUFFERS), np.int64),
+                side_buff=np.zeros(b, np.int64),
+                wrf=np.zeros(b, np.int64),
+                bfm=np.zeros(b, np.int64),
+                feasible=np.ones(b, bool))
+        keep = ~skip
+        sub = alloc_scan(t, frame[keep], backend=backend,
+                         interpret=interpret)
+        io = np.zeros((b, n), np.int64)
+        buff = np.zeros((b, NUM_BUFFERS), np.int64)
+        side_buff = np.zeros(b, np.int64)
+        wrf = np.zeros(b, np.int64)
+        bfm = np.zeros(b, np.int64)
+        feasible = np.ones(b, bool)
+        io[keep] = sub.io
+        buff[keep] = sub.buff
+        side_buff[keep] = sub.side_buff
+        wrf[keep] = sub.wrf
+        bfm[keep] = sub.bfm
+        feasible[keep] = sub.feasible
+        return AllocScanResult(io=io, buff=buff, side_buff=side_buff,
+                               wrf=wrf, bfm=bfm, feasible=feasible)
     if backend == "reference":
         return alloc_scan_ref(t, frame)
     if backend == "scan":

@@ -38,16 +38,21 @@ the driver retries it with bounded attempts, unlike real worker
 exceptions which propagate unchanged); ``"kill"`` hard-exits the worker
 process (``os._exit``), which breaks the whole ``ProcessPoolExecutor``
 and exercises pool healing; ``"delay"`` sleeps ``delay_s`` before the
-task body, which exercises deadlines and straggler re-dispatch.
+task body, which exercises deadlines and straggler re-dispatch;
+``"hold"`` blocks on a fork-inherited gate until the test releases it
+(:meth:`ChaosInjector.hold`), which exercises the same straggler paths
+*deterministically* -- a wall-clock ``delay`` races the deadline timer
+under load, a held gate cannot.
 """
 from __future__ import annotations
 
 import hashlib
+import multiprocessing as _mp
 import os
 import time
 from dataclasses import dataclass, field
 
-ACTIONS = ("raise", "kill", "delay")
+ACTIONS = ("raise", "kill", "delay", "hold")
 
 
 class ChaosError(RuntimeError):
@@ -63,13 +68,17 @@ class ChaosError(RuntimeError):
 class ChaosEvent:
     """One planned fault: what to do, and until which attempt."""
 
-    action: str                 # "raise" | "kill" | "delay"
+    action: str                 # "raise" | "kill" | "delay" | "hold"
     delay_s: float = 0.05      # sleep length for "delay"
     max_attempt: int = 1       # fire while attempt < max_attempt
+    gate: object = None        # mp.Event for "hold" (fork-inherited)
 
     def __post_init__(self):
         if self.action not in ACTIONS:
             raise ValueError(f"unknown chaos action {self.action!r}")
+        if self.action == "hold" and self.gate is None:
+            raise ValueError("hold events need a gate "
+                             "(use ChaosInjector.hold)")
 
 
 def _unit(seed: int, site: str, key) -> float:
@@ -113,13 +122,33 @@ class ChaosInjector:
                               max_attempt=self.max_attempt)
         return None
 
+    def hold(self, site: str, key, max_attempt: int = 1):
+        """Pin a ``"hold"`` fault at (site, key) and return its release.
+
+        The first ``max_attempt`` attempts of that task block on a
+        fork-inherited :class:`multiprocessing.Event` until the returned
+        zero-argument callable is invoked, giving tests a *deterministic*
+        straggler: the held attempt provably overruns any deadline while
+        the duplicate (attempt >= max_attempt) runs unimpeded.  Call the
+        release before the pool shuts down, or ``close()`` will join the
+        blocked worker forever.
+        """
+        gate = _mp.get_context("fork" if "fork" in
+                               _mp.get_all_start_methods()
+                               else None).Event()
+        self.events[(site, key)] = ChaosEvent("hold", gate=gate,
+                                              max_attempt=max_attempt)
+        return gate.set
+
     def fire(self, site: str, key, attempt: int = 0) -> None:
         """Act on the planned fault for (site, key), if any is due."""
         ev = self.event_for(site, key)
         if ev is None or attempt >= ev.max_attempt:
             return
         self.fired.append((site, key, attempt, ev.action))
-        if ev.action == "delay":
+        if ev.action == "hold":
+            ev.gate.wait()
+        elif ev.action == "delay":
             time.sleep(ev.delay_s)
         elif ev.action == "raise":
             raise ChaosError(

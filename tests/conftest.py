@@ -1,3 +1,4 @@
+import os
 import sys
 from pathlib import Path
 
@@ -5,10 +6,74 @@ from pathlib import Path
 # and the repo root for the benchmarks/ namespace package, so tests run from
 # any cwd / launcher.
 _root = Path(__file__).resolve().parent.parent
-for _p in (_root / "src", _root):
+for _p in (_root / "src", _root, _root / "tests"):
     if str(_p) not in sys.path:
         sys.path.insert(0, str(_p))
+
+from hypothesis_compat import HAVE_HYPOTHESIS, st  # noqa: E402
 
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+
+
+if HAVE_HYPOTHESIS:
+    # Fuzz budgets: tier-1 runs the small "ci" profile so the suite stays
+    # fast; the nightly CI job exports REPRO_FUZZ_PROFILE=nightly for the
+    # full budget.  Tests that want the profile budget simply omit
+    # max_examples from their @settings.
+    from hypothesis import settings as _hsettings
+    _hsettings.register_profile("ci", max_examples=20, deadline=None)
+    _hsettings.register_profile("nightly", max_examples=250, deadline=None)
+    _hsettings.load_profile(os.environ.get("REPRO_FUZZ_PROFILE", "ci"))
+
+
+# --------------------------------------------------- shared graph strategy
+# One definition of "small random residual CNN" for every property suite
+# (tests/test_property_compiler.py, tests/test_branch_bound.py): sequential
+# conv chains with random residual adds (including fan-out: one entry
+# feeding two shortcut adds), pools and upsamples (so monotone runs vary in
+# length *and* direction), and random kernel/channel choices.  Returns a
+# validated ``repro.core.ir.Graph``; callers group it themselves
+# (``group_nodes``) so they can also fuzz the policy / cut layer on top.
+@st.composite
+def random_cnn(draw):
+    """Random small residual CNN graph with shortcut edges."""
+    from repro.core.ir import Graph, make_input
+
+    g = Graph("prop")
+    size = draw(st.sampled_from([16, 32, 64]))
+    make_input(g, size, size)
+    n_blocks = draw(st.integers(2, 7))
+    ch = draw(st.sampled_from([8, 16]))
+    g.add("conv", out_ch=ch, k=3, act="relu")
+    for _ in range(n_blocks):
+        kind = draw(st.sampled_from(
+            ["plain", "residual", "residual", "pool", "upsample", "fanout"]))
+        if kind == "plain":
+            g.add("conv", out_ch=ch, k=draw(st.sampled_from([1, 3])),
+                  act="relu")
+        elif kind == "pool":
+            if g.nodes[-1].out_h >= 4:
+                g.add("maxpool", k=2, stride=2)
+        elif kind == "upsample":
+            if g.nodes[-1].out_h <= 32:
+                g.add("upsample", stride=2)
+        elif kind == "fanout":
+            # one entry is the shortcut operand of TWO adds: fan-out > 1
+            # on the shortcut edge, two residual blocks sharing a source
+            entry = g.nodes[-1]
+            g.add("conv", out_ch=ch, k=1, act="relu")
+            g.add("conv", out_ch=ch, k=3, act="linear")
+            g.add("add", inputs=[len(g.nodes) - 1, entry.idx])
+            g.add("conv", out_ch=ch, k=3, act="linear")
+            g.add("add", inputs=[len(g.nodes) - 1, entry.idx])
+        else:
+            entry = g.nodes[-1]
+            n_conv = draw(st.integers(1, 3))
+            for i in range(n_conv):
+                g.add("conv", out_ch=ch, k=draw(st.sampled_from([1, 3])),
+                      act="linear" if i == n_conv - 1 else "relu")
+            g.add("add", inputs=[len(g.nodes) - 1, entry.idx])
+    g.validate()
+    return g

@@ -1,0 +1,334 @@
+"""Branch-and-bound pruning of the cut space: the property/differential
+layer proving the oracle-exactness invariant (core/cutpoint.py).
+
+Three families of proof, per ISSUE 8:
+
+* **Admissibility** -- ``CutpointEngine.prefix_bound`` is a true lower
+  bound on every completion of a cut prefix, checked against brute force
+  on small completion slices, across the whole zoo (seeded fuzz) and on
+  hypothesis-generated random residual CNNs (the shared ``random_cnn``
+  strategy in conftest.py).  At full depth the bound must EQUAL the
+  exact primary metric -- the property the deflated-bound mutation class
+  in analysis/mutate.py is killed by.
+* **Bit-identity** -- pruned vs unpruned search returns the identical
+  argmin cut + CandidateMetrics (and identical ``evaluated`` under
+  ``count_pruned=True``) serially, at ``workers=2``, under
+  ``replay="device"``, on the coordinate-descent fallback, and across a
+  mid-search preemption (SIGTERM-latched guard) + ``resume_dir`` resume.
+* **Mutation kill** -- every seeded deflate/inflate bound mutant must
+  fail the differential suite, 100%, while the genuine bound survives.
+"""
+import itertools
+
+import numpy as np
+import pytest
+from conftest import random_cnn
+from hypothesis_compat import given, settings, st
+
+from repro.analysis.mutate import (BOUND_CLASSES, bound_kill_matrix,
+                                   bound_survives_differential)
+from repro.cnn import build_cnn
+from repro.core.cutpoint import (CutpointEngine, _key, branch_bound_subspace,
+                                 search)
+from repro.core.grouping import group_nodes
+from repro.core.hw import KCU1500
+from repro.core.search_pool import ParallelSearchDriver, SearchPreempted
+from repro.runtime.fault_tolerance import PreemptionGuard
+
+from test_search_pool import ALL_CNNS, TEST_LIMIT, assert_results_identical
+
+OBJECTIVES = ["latency", "sram", "dram"]
+
+
+@pytest.fixture(scope="module")
+def engines():
+    return {name: CutpointEngine(group_nodes(build_cnn(name)), KCU1500)
+            for name in ALL_CNNS}
+
+
+def _small_slice_depth(dims, max_slice=256):
+    """Deepest prefix depth whose completion count fits ``max_slice``."""
+    depth, total = len(dims), 1
+    while depth > 1 and total * dims[depth - 1] <= max_slice:
+        depth -= 1
+        total *= dims[depth]
+    return depth
+
+
+def _assert_bound_admissible(engine, prefix_tuple, depth, ctx=""):
+    """Brute-force every completion of ``prefix_tuple[:depth]`` and check
+    the bound key never exceeds any completion's objective key.  Returns
+    the per-objective best completion key for callers that want to chain
+    further (sound) one-sided checks against the same slice."""
+    dims = [len(r) + 1 for r in engine.runs]
+    batch = [prefix_tuple[:depth] + s for s in
+             itertools.product(*[range(d) for d in dims[depth:]])]
+    scored = engine.score_batch(batch, memoize=False)
+    best = {}
+    for obj in OBJECTIVES:
+        lb = engine.prefix_bound(prefix_tuple, depth, obj)
+        bound_key = (False, lb, 0)
+        best[obj] = min(_key(c, obj) for c in scored)
+        assert bound_key <= best[obj], (
+            f"{ctx}: inadmissible {obj} bound at depth {depth}: "
+            f"{bound_key} > best completion {best[obj]}")
+    return best
+
+
+# ------------------------------------------------------- admissibility
+@pytest.mark.parametrize("name", ALL_CNNS)
+def test_bound_admissible_fuzzed_prefixes_zoo(name, engines):
+    """Fuzzed random prefixes on every zoo net: lower bound <= true best
+    completion cost, brute-force verified on small completion slices."""
+    engine = engines[name]
+    dims = [len(r) + 1 for r in engine.runs]
+    if not dims:
+        pytest.skip("no monotone runs")
+    rng = np.random.default_rng(abs(hash(name)) % (2 ** 31))
+    depth = _small_slice_depth(dims)
+    trials = 8 if len(dims) > 1 else 2
+    for _ in range(trials):
+        t = tuple(int(rng.integers(0, d)) for d in dims)
+        if depth == len(dims):
+            continue
+        best = _assert_bound_admissible(engine, t, depth, ctx=name)
+        # The brute-forced slice is a SUBSET of the completions of every
+        # shallower prefix of t, and min over a subset >= min over the
+        # superset, so each shallower bound must also stay <= the slice
+        # minimum.  (One-sided: requires no depth-monotonicity of the
+        # bound, only admissibility at each depth.)
+        for d2 in range(1, depth):
+            for obj in OBJECTIVES:
+                lb = engine.prefix_bound(t, d2, obj)
+                assert (False, lb, 0) <= best[obj], (
+                    f"{name}: inadmissible {obj} bound at depth {d2}: "
+                    f"lb={lb} vs slice best {best[obj]}")
+
+
+@pytest.mark.parametrize("name", ALL_CNNS)
+def test_bound_exact_at_full_depth_zoo(name, engines):
+    """depth == len(runs): the completion is unique, so the bound must
+    equal the exact primary metric bit-for-bit (all objectives) -- the
+    property that kills deflated-bound mutants."""
+    engine = engines[name]
+    dims = [len(r) + 1 for r in engine.runs]
+    if not dims:
+        pytest.skip("no monotone runs")
+    nr = len(dims)
+    rng = np.random.default_rng(abs(hash(name + "x")) % (2 ** 31))
+    for _ in range(6):
+        t = tuple(int(rng.integers(0, d)) for d in dims)
+        m = engine.evaluate(t, memoize=False)
+        for obj in OBJECTIVES:
+            lb = engine.prefix_bound(t, nr, obj)
+            assert lb == _key(m, obj)[1], (
+                f"{name}/{obj}: full-depth bound {lb!r} != exact "
+                f"{_key(m, obj)[1]!r} at {t}")
+
+
+@pytest.mark.slow
+@settings(deadline=None)
+@given(g=random_cnn(), data=st.data())
+def test_bound_admissible_on_random_graphs(g, data):
+    """The shared hypothesis graph strategy: admissibility + full-depth
+    exactness must hold on random residual CNNs with shortcut fan-out,
+    pools and upsamples -- not just the zoo."""
+    gg = group_nodes(g)
+    engine = CutpointEngine(gg, KCU1500)
+    dims = [len(r) + 1 for r in engine.runs]
+    if not dims:
+        return
+    t = tuple(data.draw(st.integers(0, d - 1), label=f"cut{i}")
+              for i, d in enumerate(dims))
+    depth = _small_slice_depth(dims, max_slice=128)
+    if depth < len(dims):
+        _assert_bound_admissible(engine, t, depth, ctx="random-graph")
+    m = engine.evaluate(t, memoize=False)
+    for obj in OBJECTIVES:
+        assert engine.prefix_bound(t, len(dims), obj) == _key(m, obj)[1]
+
+
+# --------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("name", ALL_CNNS)
+def test_pruned_search_identical_serial(name):
+    gg = group_nodes(build_cnn(name))
+    unpruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                      prune=False)
+    pruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT, prune=True)
+    assert_results_identical(unpruned, pruned, ctx=f"serial-{name}")
+    assert unpruned.pruned == 0
+
+
+@pytest.mark.parametrize("objective", OBJECTIVES)
+def test_pruned_search_identical_all_objectives(objective):
+    gg = group_nodes(build_cnn("resnet50"))
+    unpruned = search(gg, KCU1500, objective=objective,
+                      exhaustive_limit=TEST_LIMIT, prune=False)
+    pruned = search(gg, KCU1500, objective=objective,
+                    exhaustive_limit=TEST_LIMIT, prune=True)
+    assert_results_identical(unpruned, pruned, ctx=f"obj-{objective}")
+    assert pruned.pruned > 0          # resnet50's space genuinely prunes
+
+
+def test_pruned_search_identical_workers2():
+    gg = group_nodes(build_cnn("resnet50"))
+    unpruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                      prune=False)
+    pruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                    prune=True, workers=2)
+    assert_results_identical(unpruned, pruned, ctx="workers2")
+
+
+def test_pruned_search_identical_device_replay():
+    gg = group_nodes(build_cnn("resnet50"))
+    unpruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                      prune=False)
+    pruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                    prune=True, replay="device")
+    assert_results_identical(unpruned, pruned, ctx="device")
+    pruned2 = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                     prune=True, workers=2, replay="device")
+    assert_results_identical(unpruned, pruned2, ctx="device-workers2")
+
+
+def test_pruned_search_identical_coordinate_descent():
+    """exhaustive_limit=1 forces descent, where pruning is a no-op by
+    construction (a pruned trial could never win strict-< improvement):
+    identical results, zero pruned."""
+    gg = group_nodes(build_cnn("resnet50"))
+    unpruned = search(gg, KCU1500, exhaustive_limit=1, prune=False)
+    pruned = search(gg, KCU1500, exhaustive_limit=1, prune=True)
+    assert_results_identical(unpruned, pruned, ctx="descent")
+    assert pruned.pruned == 0
+
+
+def test_pruned_search_resumes_after_preemption(tmp_path):
+    """Mid-search preemption (latched SIGTERM guard) + resume_dir: the
+    resumed pruned search merges to the unpruned serial result, with the
+    journal's partially-complete task set feeding the incumbent."""
+    gg = group_nodes(build_cnn("resnet50"))
+    serial = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT, prune=False)
+    guard = PreemptionGuard()
+    guard.request()                        # SIGTERM already latched
+    with ParallelSearchDriver(workers=2, guard=guard) as d:
+        with pytest.raises(SearchPreempted, match="resume to finish"):
+            d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                     resume_dir=tmp_path, prune=True)
+    with ParallelSearchDriver(workers=2) as d:
+        r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                     resume_dir=tmp_path, prune=True)
+    assert_results_identical(serial, r, ctx="preempt-resume")
+
+
+def test_count_pruned_accounting():
+    """count_pruned=True (default): evaluated == full enumeration count.
+    count_pruned=False: evaluated counts only scored candidates, and
+    scored + pruned == the enumeration count."""
+    gg = group_nodes(build_cnn("resnet50"))
+    base = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                  prune=False)
+    counted = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                     prune=True, count_pruned=True)
+    raw = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
+                 prune=True, count_pruned=False)
+    assert counted.evaluated == base.evaluated
+    assert raw.evaluated + raw.pruned == base.evaluated
+    assert raw.best.cuts == base.best.cuts
+
+
+# ------------------------------------------------- subspace-level checks
+def test_branch_bound_subspace_prune_off_is_plain_enumeration():
+    """prune=False must degenerate to the chunked exhaustive walk: same
+    argmin, same evaluations, zero pruned."""
+    gg = group_nodes(build_cnn("vgg16-conv"))
+    e1 = CutpointEngine(gg, KCU1500)
+    e2 = CutpointEngine(gg, KCU1500)
+    dims = [len(r) for r in e1.runs]
+    b1, p1 = branch_bound_subspace(e1, (), dims, "latency", prune=False)
+    b2, p2 = branch_bound_subspace(e2, (), dims, "latency", prune=True)
+    assert p1 == 0
+    assert b1.cuts == b2.cuts
+    assert _key(b1, "latency") == _key(b2, "latency")
+    space = 1
+    for d in dims:
+        space *= d + 1
+    assert e1.evaluations == space
+    assert e2.evaluations + p2 == space
+
+
+def test_branch_bound_subspace_external_incumbent_can_prune_everything():
+    """An unbeatable external incumbent prunes the whole sub-space: best
+    is None and pruned counts every bounded-away candidate (the parallel
+    driver's fully-pruned-task case)."""
+    gg = group_nodes(build_cnn("resnet50"))
+    engine = CutpointEngine(gg, KCU1500)
+    dims = [len(r) for r in engine.runs]
+    best, pruned = branch_bound_subspace(
+        engine, (), dims, "latency",
+        incumbent_key=(False, -1.0, 0), prune=True)
+    space = 1
+    for d in dims:
+        space *= d + 1
+    assert best is None
+    assert pruned + engine.evaluations == space
+    assert pruned > 0
+
+
+def test_score_batch_skip_mask_contract():
+    """Skipped lanes return None, are never replayed, and do not count
+    toward evaluations; surviving lanes are bit-identical."""
+    gg = group_nodes(build_cnn("vgg16-conv"))
+    engine = CutpointEngine(gg, KCU1500)
+    dims = [len(r) + 1 for r in engine.runs]
+    batch = list(itertools.product(*[range(d) for d in dims]))[:8]
+    ref = CutpointEngine(gg, KCU1500).score_batch(batch, memoize=False)
+    skip = [i % 2 == 1 for i in range(len(batch))]
+    out = engine.score_batch(batch, memoize=False, skip=skip)
+    assert engine.evaluations == len(batch) - sum(skip)
+    for c, r, s in zip(out, ref, skip):
+        if s:
+            assert c is None
+        else:
+            assert c.cuts == r.cuts and _key(c, "latency") == _key(
+                r, "latency")
+    with pytest.raises(ValueError, match="memoize=False"):
+        engine.score_batch(batch, memoize=True, skip=skip)
+
+
+def test_score_batch_skip_mask_device_replay():
+    gg = group_nodes(build_cnn("vgg16-conv"))
+    ref_e = CutpointEngine(gg, KCU1500)
+    dev_e = CutpointEngine(gg, KCU1500, replay="device")
+    dims = [len(r) + 1 for r in ref_e.runs]
+    batch = list(itertools.product(*[range(d) for d in dims]))[:8]
+    skip = [i % 3 == 0 for i in range(len(batch))]
+    ref = ref_e.score_batch(batch, memoize=False, skip=skip)
+    dev = dev_e.score_batch(batch, memoize=False, skip=skip)
+    assert ref_e.evaluations == dev_e.evaluations
+    for a, b in zip(ref, dev):
+        if a is None:
+            assert b is None
+            continue
+        for f in ("latency_cycles", "dram_total", "dram_fm", "sram_total",
+                  "bram18k", "feasible"):
+            assert getattr(a, f) == getattr(b, f)
+
+
+# ----------------------------------------------------- mutation-kill gate
+def test_bound_differential_sound(engines):
+    """The genuine bound passes its own differential suite (a gate that
+    kills everything proves nothing)."""
+    for name in ("vgg16-conv", "resnet50", "mobilenet-v3"):
+        assert bound_survives_differential(engines[name], seed=0,
+                                           probes=4), name
+
+
+def test_bound_mutation_kill_matrix(engines):
+    """100% kill: every deflate/inflate bound mutant on every probed net
+    must fail the differential suite."""
+    probe = {n: engines[n]
+             for n in ("vgg16-conv", "resnet50", "mobilenet-v3", "yolov2")}
+    rows = bound_kill_matrix(probe, seeds=(0, 1, 2), probes=4)
+    missed = [r for r in rows if not r["killed"]]
+    assert not missed, f"bound mutants survived the differential: {missed}"
+    assert {r["cls"] for r in rows} == set(BOUND_CLASSES)

@@ -1,44 +1,22 @@
 """Property-based tests (hypothesis): the analytical DRAM model must match
 the instruction-stream simulator for RANDOM residual CNNs under RANDOM
-reuse policies, and the allocator must never clobber live tensors."""
+reuse policies, and the allocator must never clobber live tensors.
+
+The graph generator is the shared ``random_cnn`` strategy in conftest.py
+(also used by tests/test_branch_bound.py), so fuzzing covers shortcut
+fan-out, upsamples and varying monotone-run shapes -- not just the zoo."""
 import numpy as np
+from conftest import random_cnn
 from hypothesis_compat import given, settings, st
 
 from repro.core.allocator import allocate
 from repro.core.dram import dram_report
 from repro.core.grouping import group_nodes
-from repro.core.ir import Graph, make_input
 from repro.core.isa import generate_instructions
 from repro.core.simulator import simulate
 
 
-@st.composite
-def random_cnn(draw):
-    """Sequential conv chain with random residual adds and pools."""
-    g = Graph("prop")
-    size = draw(st.sampled_from([32, 64]))
-    make_input(g, size, size)
-    n_blocks = draw(st.integers(2, 7))
-    ch = draw(st.sampled_from([8, 16]))
-    g.add("conv", out_ch=ch, k=3, act="relu")
-    for _ in range(n_blocks):
-        kind = draw(st.sampled_from(["plain", "residual", "pool"]))
-        if kind == "plain":
-            g.add("conv", out_ch=ch, k=draw(st.sampled_from([1, 3])),
-                  act="relu")
-        elif kind == "pool":
-            if g.nodes[-1].out_h >= 4:
-                g.add("maxpool", k=2, stride=2)
-        else:
-            entry = g.nodes[-1]
-            g.add("conv", out_ch=ch, k=1, act="relu")
-            g.add("conv", out_ch=ch, k=3, act="linear")
-            g.add("add", inputs=[len(g.nodes) - 1, entry.idx])
-    g.validate()
-    return g
-
-
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(g=random_cnn(), seed=st.integers(0, 999))
 def test_dram_model_equals_simulator_on_random_graphs(g, seed):
     gg = group_nodes(g)
@@ -53,7 +31,7 @@ def test_dram_model_equals_simulator_on_random_graphs(g, seed):
     assert counters.weight_reads == rep.weight_bytes
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(g=random_cnn())
 def test_allocator_never_clobbers_live_tensors(g):
     gg = group_nodes(g)
@@ -72,7 +50,7 @@ def test_allocator_never_clobbers_live_tensors(g):
             live[b] = gr.gid
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(g=random_cnn(), seed=st.integers(0, 99))
 def test_simulator_numerics_on_random_graphs(g, seed):
     """Random policy execution must equal the direct JAX reference."""
