@@ -62,6 +62,7 @@ from repro.core.cutpoint import (DEFAULT_BATCH_SIZE,             # noqa: E402
                                  monotone_runs, search, split_blocks)
 from repro.core.grouping import group_nodes                      # noqa: E402
 from repro.core.hw import KCU1500                                # noqa: E402
+from repro.core.options import CompileOptions              # noqa: E402
 from repro.core.search_pool import (TASKS_PER_WORKER,            # noqa: E402
                                     ParallelSearchDriver, SearchPreempted,
                                     _run_subspace, partition_space)
@@ -338,10 +339,10 @@ def bench_chaos(name: str = "yolov2", size: int = 416,
             with ParallelSearchDriver(workers=workers, mp_context="fork",
                                       guard=guard) as d:
                 try:
-                    res = d.run_subspaces(gg, KCU1500, prefixes,
-                                          suffix_dims,
-                                          resume_dir=resume_dir,
-                                          blocks=blocks, runs=runs)
+                    res = d.run_subspaces(
+                        gg, KCU1500, prefixes, suffix_dims,
+                        CompileOptions(resume_dir=resume_dir),
+                        blocks=blocks, runs=runs)
                 except SearchPreempted:
                     assert expect_preempt, "unexpected preemption"
                     res = None
@@ -453,7 +454,7 @@ def bench_prune(name: str = "yolov2", size: int = 416,
             t0 = time.perf_counter()
             with ParallelSearchDriver(workers=workers,
                                       mp_context="fork") as d:
-                res = d.search(gg, KCU1500, prune=prune)
+                res = d.search(gg, KCU1500, CompileOptions(prune=prune))
             wall = time.perf_counter() - t0
         finally:
             if injector is not None:
@@ -519,11 +520,11 @@ def smoke_prune_gate() -> dict:
     gg = group_nodes(build_cnn("resnet50", 224))
     rate_u = measure_busyloop_rate()
     t0 = time.perf_counter()
-    unp = search(gg, KCU1500, prune=False)
+    unp = search(gg, KCU1500, CompileOptions(prune=False))
     unp_wall = time.perf_counter() - t0
     rate_p = measure_busyloop_rate()
     t0 = time.perf_counter()
-    prn = search(gg, KCU1500, prune=True)
+    prn = search(gg, KCU1500)
     prn_wall = time.perf_counter() - t0
     assert prn.best.cuts == unp.best.cuts
     for f in METRICS:
@@ -621,7 +622,8 @@ def bench_network(name: str, size: int, budget_s: float,
     # end-to-end compile (grouping + search + instruction generation)
     graph = build_cnn(name, size)
     t0 = time.perf_counter()
-    plan = compile_graph(graph, KCU1500, workers=compile_workers)
+    plan = compile_graph(graph, KCU1500,
+                         CompileOptions(workers=compile_workers))
     compile_s = time.perf_counter() - t0
 
     row = {
@@ -697,7 +699,7 @@ def smoke_parallel_gate() -> None:
     count) on a real network whose space is actually partitioned."""
     gg = group_nodes(build_cnn("resnet50", 224))
     serial = search(gg, KCU1500)
-    parallel = search(gg, KCU1500, workers=2)
+    parallel = search(gg, KCU1500, CompileOptions(workers=2))
     assert serial.best.cuts == parallel.best.cuts
     for f in METRICS:
         assert getattr(serial.best, f) == getattr(parallel.best, f), f
@@ -726,7 +728,7 @@ def smoke_verify_gate() -> dict:
     compile_walls = []
     for _ in range(3):
         t0 = time.perf_counter()
-        plan = compile_graph(g, exhaustive_limit=50_000)
+        plan = compile_graph(g, options=CompileOptions(exhaustive_limit=50_000))
         compile_walls.append(time.perf_counter() - t0)
     verify_walls = []
     for _ in range(5):

@@ -15,6 +15,7 @@ from repro.core.compiler import all_row_policy, compile_graph
 from repro.core.cutpoint import sweep_single_cut
 from repro.core.grouping import group_nodes
 from repro.core.hw import KCU1500
+from repro.core.options import CompileOptions
 
 MB = 1 << 20
 
@@ -26,8 +27,9 @@ def _plan(name: str, size: int, objective: str = "latency"):
     yolov2's space is fully enumerable at the 8M exhaustive_limit and the
     parallel result is bit-identical to serial (tests/test_search_pool.py),
     so the tables are unaffected by the worker count."""
-    return compile_graph(build_cnn(name, size), KCU1500, objective=objective,
-                         workers=os.cpu_count() or 1)
+    return compile_graph(build_cnn(name, size), KCU1500,
+                         CompileOptions(objective=objective,
+                                        workers=os.cpu_count() or 1))
 
 
 @dataclass

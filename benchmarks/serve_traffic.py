@@ -1,0 +1,231 @@
+"""Compile-service traffic benchmark: p50/p99 serve latency vs request
+rate and cache hit ratio.
+
+Drives :class:`repro.service.CompileService` (the in-process serving
+core: bounded queue, persistent plan cache, coalescing, warm-started
+misses) with an open-loop request generator: requests are submitted at a
+fixed rate -- NOT waiting for completions, which is what exposes queue
+buildup -- and each ticket's end-to-end latency (queue wait + service)
+is recorded.  A traffic *cell* is (target hit ratio, request rate); the
+hit ratio is controlled by pre-warming the cache with the hit population
+and minting fresh hw variants (scaled ``sram_budget``) for the misses,
+so every miss is a genuinely new cache key that runs a full
+``compile_graph``.
+
+As with the other benchmark gates, raw milliseconds would gate on
+machine speed, so the committed floor in BENCH_serve.json stores the
+committing machine's busy-loop rate (benchmarks/busyloop.py) and the
+smoke gate normalizes the hit-path p50 by the rate ratio.
+
+``--smoke`` (CI): 3 zoo nets, asserts (a) a served cache hit is
+byte-identical to a cold ``compile_graph`` of the same request
+(``encode_plan`` equality, the service's core contract) and (b) the
+hit-path p50 stays under the busy-loop-normalized floor; writes
+BENCH_serve_smoke.json next to the committed BENCH_serve.json.
+
+Full mode sweeps >= 2 hit ratios x >= 2 request rates and writes
+BENCH_serve.json (committed).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import statistics
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from busyloop import measure_busyloop_rate                       # noqa: E402
+from repro.cnn import build_cnn                                  # noqa: E402
+from repro.core.compiler import compile_graph                    # noqa: E402
+from repro.core.hw import KCU1500                                # noqa: E402
+from repro.core.options import CompileOptions                    # noqa: E402
+from repro.service import CompileService, encode_plan            # noqa: E402
+
+# Small inputs + a bounded exhaustive limit keep a cold compile in the
+# ~0.1-2s band, so miss-bearing cells finish in CI time while still
+# exercising the real search path.
+SERVE_OPTS = CompileOptions(exhaustive_limit=50_000)
+SMOKE_NETS = [("vgg16-conv", 64), ("mobilenet-v3", 64), ("resnet50", 64)]
+FULL_NETS = SMOKE_NETS + [("yolov2", 128), ("efficientnet-b1", 64)]
+
+
+def _hw_variant(i: int):
+    """A distinct-but-plausible hw config per miss: scaled sram_budget
+    (a plan-affecting hw field, so each variant is a new cache key and a
+    warm-start candidate for its neighbours)."""
+    if i == 0:
+        return KCU1500
+    return dataclasses.replace(
+        KCU1500, name=f"kcu1500-v{i}",
+        sram_budget=KCU1500.sram_budget + 65536 * i)
+
+
+def _percentiles(xs: list[float]) -> tuple[float, float]:
+    xs = sorted(xs)
+    return (statistics.median(xs),
+            xs[min(len(xs) - 1, round(0.99 * (len(xs) - 1)))])
+
+
+def bench_cell(nets, hit_ratio: float, rate_rps: float, n_requests: int,
+               threads: int = 2) -> dict:
+    """One traffic cell: open-loop submission at ``rate_rps`` with
+    ``hit_ratio`` of the requests targeting pre-warmed keys."""
+    n_miss = round(n_requests * (1.0 - hit_ratio))
+    # interleave misses evenly through the run
+    miss_at = {round(i * n_requests / n_miss) for i in range(n_miss)} \
+        if n_miss else set()
+    with tempfile.TemporaryDirectory() as td:
+        with CompileService(td, options=SERVE_OPTS, max_pending=n_requests,
+                            threads=threads) as svc:
+            graphs = {name: build_cnn(name, size) for name, size in nets}
+            for name, _ in nets:               # the hit population
+                svc.compile(graphs[name], timeout=600)
+            variant = 0
+            tickets = []
+            t_start = time.perf_counter()
+            for i in range(n_requests):
+                target = t_start + i / rate_rps
+                while time.perf_counter() < target:
+                    time.sleep(0.0005)
+                name, _ = nets[i % len(nets)]
+                if i in miss_at:
+                    variant += 1
+                    hw = _hw_variant(variant)
+                else:
+                    hw = KCU1500
+                tickets.append((svc.submit(graphs[name], hw),
+                                time.perf_counter()))
+            lat, hit_lat = [], []
+            hits = 0
+            for t, t_sub in tickets:
+                t.result(timeout=600)
+                total = t.queue_wait_s + t.service_s
+                lat.append(total)
+                if t.hit:
+                    hits += 1
+                    hit_lat.append(total)
+            stats = dict(svc.stats)
+    p50, p99 = _percentiles(lat)
+    cell = {
+        "hit_ratio_target": hit_ratio,
+        "rate_rps": rate_rps,
+        "n_requests": n_requests,
+        "measured_hit_ratio": round(hits / len(tickets), 3),
+        "p50_ms": round(1000 * p50, 3),
+        "p99_ms": round(1000 * p99, 3),
+        "warm_started_misses": stats["warm_starts"],
+        "coalesced": stats["coalesced"],
+    }
+    if hit_lat:
+        hp50, hp99 = _percentiles(hit_lat)
+        cell["hit_p50_ms"] = round(1000 * hp50, 3)
+        cell["hit_p99_ms"] = round(1000 * hp99, 3)
+    return cell
+
+
+def assert_hit_cold_bit_identity(nets) -> None:
+    """The service contract the whole cache design hangs on: a served
+    hit must be byte-identical (encode_plan equality) to a cold
+    compile_graph of the same request."""
+    with tempfile.TemporaryDirectory() as td:
+        with CompileService(td, options=SERVE_OPTS) as svc:
+            for name, size in nets:
+                g = build_cnn(name, size)
+                svc.compile(g, timeout=600)            # populate
+                t = svc.submit(g)
+                hit_plan = t.result(timeout=600)
+                assert t.hit, f"{name}: expected a cache hit"
+                cold = compile_graph(g, options=SERVE_OPTS)
+                assert encode_plan(hit_plan) == encode_plan(cold), (
+                    f"{name}: served hit differs from cold compile")
+                print(f"hit/cold bit-identity OK: {name}@{size}")
+
+
+def smoke_gate(committed_path: Path) -> dict:
+    """CI gate: bit-identity on the smoke nets + hit-path p50 under the
+    busy-loop-normalized floor from the committed BENCH_serve.json."""
+    assert_hit_cold_bit_identity(SMOKE_NETS)
+    rate = measure_busyloop_rate()
+    cell = bench_cell(SMOKE_NETS, hit_ratio=1.0, rate_rps=20.0,
+                      n_requests=30)
+    record = {"busyloop_ops_per_sec": round(rate, 1), "hit_path": cell,
+              "bit_identity": "passed"}
+    committed = json.loads(committed_path.read_text())
+    # normalize the committed floor to this machine's speed, with head-
+    # room for container weather (hits are pure-Python decode + verify,
+    # so they scale with the busy-loop rate)
+    scale = committed["busyloop_ops_per_sec"] / rate
+    floor = committed["max_hit_p50_ms"] * scale * 3.0
+    record["normalized_floor_ms"] = round(floor, 3)
+    record["passed"] = cell["hit_p50_ms"] < floor
+    if record["passed"]:
+        print(f"serve gate OK: hit p50 {cell['hit_p50_ms']}ms < "
+              f"normalized floor {floor:.1f}ms")
+    else:
+        record["fail_msg"] = (
+            f"serve hit-path regression: p50 {cell['hit_p50_ms']}ms >= "
+            f"normalized floor {floor:.1f}ms "
+            f"(committed {committed['max_hit_p50_ms']}ms at "
+            f"{committed['busyloop_ops_per_sec']} ops/s, here {rate:.0f})")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI run: 3 nets, hit/cold bit-identity + "
+                         "normalized hit-path p50 gate; writes "
+                         "BENCH_serve_smoke.json")
+    ap.add_argument("--requests", type=int, default=40,
+                    help="requests per traffic cell (full mode)")
+    ap.add_argument("-o", "--output", default="BENCH_serve.json")
+    args = ap.parse_args()
+    root = Path(__file__).resolve().parent.parent
+
+    if args.smoke:
+        record = smoke_gate(root / "BENCH_serve.json")
+        out = Path("BENCH_serve_smoke.json")
+        out.write_text(json.dumps(record, indent=2) + "\n")
+        print(f"wrote {out}")
+        assert record["passed"], record["fail_msg"]
+        return
+
+    rate = measure_busyloop_rate()
+    assert_hit_cold_bit_identity(SMOKE_NETS)
+    cells = []
+    for hit_ratio in (0.5, 0.9, 1.0):
+        for rps in (4.0, 16.0):
+            cell = bench_cell(FULL_NETS, hit_ratio, rps, args.requests)
+            print(f"hit={hit_ratio} rate={rps}rps: p50 {cell['p50_ms']}ms "
+                  f"p99 {cell['p99_ms']}ms "
+                  f"(measured hit ratio {cell['measured_hit_ratio']})")
+            cells.append(cell)
+    hit_p50s = [c["hit_p50_ms"] for c in cells if "hit_p50_ms" in c]
+    record = {
+        "hw": "kcu1500 (+sram_budget variants for misses)",
+        "note": ("open-loop traffic against CompileService; latency = "
+                 "queue wait + service per ticket; misses are fresh hw "
+                 "variants (full compile_graph, warm-started from the "
+                 "nearest cached plan); hit/cold bit-identity asserted "
+                 "by tests/test_service.py and the --smoke gate"),
+        "busyloop_ops_per_sec": round(rate, 1),
+        "options": {"exhaustive_limit": SERVE_OPTS.exhaustive_limit},
+        "networks": [f"{n}@{s}" for n, s in FULL_NETS],
+        "cells": cells,
+        # the floor the smoke gate normalizes against: the worst hit-path
+        # p50 seen on the committing machine, rounded up
+        "max_hit_p50_ms": round(max(hit_p50s) + 1.0, 1),
+    }
+    out = root / args.output
+    out.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

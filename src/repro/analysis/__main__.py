@@ -24,6 +24,7 @@ from repro.analysis.mutate import kill_matrix, render_kill_matrix
 from repro.analysis.verifier import verify_execution_plan
 from repro.cnn import build_cnn
 from repro.core.compiler import compile_graph
+from repro.core.options import CompileOptions
 
 ZOO = [("vgg16-conv", 224), ("yolov2", 416), ("yolov3", 416),
        ("resnet50", 224), ("resnet152", 224), ("efficientnet-b1", 256),
@@ -73,9 +74,11 @@ def main(argv: list[str] | None = None) -> int:
     plans: dict[str, object] = {}
     total_errors = 0
     for name in nets:
-        plan = compile_graph(build_cnn(name, sizes[name]),
-                             exhaustive_limit=args.exhaustive_limit,
-                             replay=args.replay)
+        plan = compile_graph(
+            build_cnn(name, sizes[name]),
+            options=CompileOptions(
+                exhaustive_limit=args.exhaustive_limit,
+                replay=args.replay))
         plans[name] = plan
         diags = verify_execution_plan(plan)
         total_errors += sum(d.severity is Severity.ERROR for d in diags)

@@ -28,9 +28,10 @@ import warnings
 from dataclasses import dataclass, field
 
 from repro.core.allocator import Allocation, allocate, frame_feasible
-from repro.core.cutpoint import (DEFAULT_BATCH_SIZE, EXHAUSTIVE_LIMIT,
-                                 Candidate, SearchResult, search,
-                                 sweep_single_cut)
+from repro.core.cutpoint import (DEFAULT_BATCH_SIZE,  # noqa: F401
+                                 EXHAUSTIVE_LIMIT, Candidate, SearchResult,
+                                 search, sweep_single_cut)
+from repro.core.options import CompileOptions, resolve_options
 from repro.core.dram import DRAMReport, baseline_total, dram_report
 from repro.core.grouping import GroupedGraph, group_nodes
 from repro.core.hw import FPGAConfig, KCU1500
@@ -90,81 +91,66 @@ class ExecutionPlan:
                 f"SRAM {self.sram.sram_total * mb:.3f} MB")
 
 
+def apply_verification(plan: ExecutionPlan, mode: str,
+                       site: str = "compile_graph") -> ExecutionPlan:
+    """Run the static plan verifier (``repro.analysis``) over a finished
+    plan, per the ``verify`` mode: ``"off"`` is a no-op, ``"warn"``
+    records the diagnostics on ``plan.diagnostics`` and emits a
+    ``UserWarning`` per error-severity finding, ``"strict"`` raises
+    ``repro.analysis.VerificationError`` on any error-severity
+    diagnostic.  A pure post-check: the plan bytes are never changed,
+    which is why the compile service runs this on cache *hits* too
+    instead of keying the cache on ``verify``."""
+    if mode == "off":
+        return plan
+    # Imported lazily: analysis depends on core, not the reverse.
+    from repro.analysis import (VerificationError, errors_of,
+                                verify_execution_plan)
+    plan.diagnostics = verify_execution_plan(plan)
+    errors = errors_of(plan.diagnostics)
+    if errors and mode == "strict":
+        raise VerificationError(plan.graph.name, plan.diagnostics)
+    for d in errors:
+        warnings.warn(f"{site}({plan.graph.name}): {d.render()}",
+                      stacklevel=3)
+    return plan
+
+
 def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
-                  objective: str = "latency",
-                  policy: dict[int, str] | None = None,
-                  exhaustive_limit: int = EXHAUSTIVE_LIMIT,
-                  workers: int | None = 1,
-                  batch_size: int = DEFAULT_BATCH_SIZE,
-                  replay: str = "journal",
-                  max_retries: int = 2,
-                  task_deadline_s: float | None = None,
-                  resume_dir=None,
-                  guard=None,
-                  prune: bool = True,
-                  count_pruned: bool = True,
-                  verify: str = "off") -> ExecutionPlan:
+                  options: CompileOptions | None = None,
+                  *, policy: dict[int, str] | None = None,
+                  guard=None, warm_start=None,
+                  **legacy) -> ExecutionPlan:
     """Compile a CNN graph into an :class:`ExecutionPlan`.
 
-    ``objective``, ``exhaustive_limit``, ``workers``, ``batch_size`` and
-    ``replay`` are forwarded to :func:`repro.core.cutpoint.search` (see
-    its docstring for the full contract); in short, ``objective`` picks
-    what the optimizer minimizes ("latency" / "sram" / "dram"),
-    ``exhaustive_limit`` bounds the cut space enumerated exhaustively
-    before coordinate descent takes over, ``workers`` > 1 (or ``None``
-    for all cores) parallelizes the search across processes,
-    ``batch_size`` sets how many cut tuples each
-    ``CutpointEngine.score_batch`` call scores at once, and ``replay``
-    selects the scorer's allocator replay ("journal" Python replay vs
-    the "device" tensorized scan).  All three parallelism/staging knobs
-    leave the result bit-identical.
+    All search/scheduling knobs arrive as one
+    :class:`repro.core.options.CompileOptions` -- that class's docstring
+    is the single knob reference (objective, exhaustive_limit, workers,
+    batch_size, replay, backend, max_retries, task_deadline_s,
+    resume_dir, prune, count_pruned, verify).  The legacy loose-keyword
+    spelling (``compile_graph(g, hw, workers=8)``) still works through
+    the deprecation shim and emits
+    :class:`~repro.core.options.LegacyKnobWarning`.
 
-    The fault-tolerance knobs are forwarded too: ``max_retries`` bounds
-    per-task re-dispatch after transient worker failures,
-    ``task_deadline_s`` enables speculative straggler re-dispatch,
-    ``resume_dir`` turns on the task-granular completion journal so a
-    killed or preempted compile resumes where it left off (byte-identical
-    result, with the recovery surfaced on ``plan.search.events``), and
-    ``guard`` (a ``PreemptionGuard``) makes SIGTERM drain the search
-    cleanly (raising ``SearchPreempted``) instead of dying mid-task.
-
-    ``prune`` (default on) enables exact branch-and-bound pruning of the
-    cut space: sub-spaces whose admissible lower bound exceeds the
-    incumbent are skipped before any allocator replay.  The argmin cut
-    and its metrics are bit-identical to the unpruned search by the
-    bound's admissibility (tests/test_branch_bound.py); with
-    ``count_pruned`` (default on) ``plan.search.evaluated`` also stays
-    the full enumeration count (scored + pruned), so existing
-    accounting-based comparisons keep holding.  ``count_pruned=False``
-    reports only the candidates actually scored, and
-    ``plan.search.pruned`` exposes the pruned-tuple count either way.
-
-    If ``policy`` is given (gid -> "row"/"frame"), the optimizer is
-    skipped and the policy is compiled verbatim -- this is how the all-row
-    baseline and ablation plans are built; feasibility is still computed
-    honestly for the resulting Candidate.
-
-    ``verify`` runs the static plan verifier (``repro.analysis``) over the
-    finished plan: ``"off"`` (default) skips it, ``"warn"`` records the
-    diagnostics on ``plan.diagnostics`` and emits a ``UserWarning`` per
-    error-severity finding, ``"strict"`` raises
-    ``repro.analysis.VerificationError`` if any error-severity diagnostic
-    is found.  A clean compile leaves ``plan.diagnostics`` empty.
+    Three arguments stay outside the options value because they are not
+    reusable configuration: ``policy`` (gid -> "row"/"frame") skips the
+    optimizer and compiles the given policy verbatim -- this is how the
+    all-row baseline and ablation plans are built (feasibility is still
+    computed honestly for the resulting Candidate); ``guard`` is a live
+    :class:`~repro.runtime.fault_tolerance.PreemptionGuard` that makes
+    SIGTERM drain the search cleanly (``SearchPreempted``) instead of
+    dying mid-task; ``warm_start`` is a cut tuple (typically from the
+    compile service's plan cache) forwarded to
+    :func:`repro.core.cutpoint.search`, which prices it through the
+    oracle and seeds the branch-and-bound incumbent -- exhaustive-path
+    results stay bit-identical to a cold compile.
     """
-    if verify not in ("off", "warn", "strict"):
-        raise ValueError(f"verify={verify!r}: expected 'off', 'warn' or "
-                         f"'strict'")
+    opts = resolve_options(options, legacy, site="compile_graph")
     graph.validate()
     gg = group_nodes(graph)
     result: SearchResult | None = None
     if policy is None:
-        result = search(gg, hw, objective=objective,
-                        exhaustive_limit=exhaustive_limit, workers=workers,
-                        batch_size=batch_size, replay=replay,
-                        max_retries=max_retries,
-                        task_deadline_s=task_deadline_s,
-                        resume_dir=resume_dir, guard=guard,
-                        prune=prune, count_pruned=count_pruned)
+        result = search(gg, hw, opts, guard=guard, warm_start=warm_start)
         cand = result.best
         alloc = cand.alloc
     else:
@@ -186,18 +172,7 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
         sram=sram, dram=dram, latency=latency,
         instructions=generate_instructions(gg, alloc),
         search=result)
-    if verify != "off":
-        # Imported lazily: analysis depends on core, not the reverse.
-        from repro.analysis import (VerificationError, errors_of,
-                                    verify_execution_plan)
-        plan.diagnostics = verify_execution_plan(plan)
-        errors = errors_of(plan.diagnostics)
-        if errors and verify == "strict":
-            raise VerificationError(graph.name, plan.diagnostics)
-        for d in errors:
-            warnings.warn(f"compile_graph({graph.name}): {d.render()}",
-                          stacklevel=2)
-    return plan
+    return apply_verification(plan, opts.verify)
 
 
 def all_row_policy(gg: GroupedGraph) -> dict[int, str]:

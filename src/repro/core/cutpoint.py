@@ -96,6 +96,11 @@ from repro.core.dram import (dram_fm_fast, dram_fm_fast_batch, dram_report,
                              dram_tables)
 from repro.core.grouping import GroupedGraph
 from repro.core.hw import FPGAConfig
+# DEFAULT_BATCH_SIZE / EXHAUSTIVE_LIMIT canonically live with the
+# CompileOptions defaults; re-exported here for long-standing import sites.
+from repro.core.options import (DEFAULT_BATCH_SIZE,  # noqa: F401
+                                EXHAUSTIVE_LIMIT, CompileOptions,
+                                resolve_options)
 from repro.core.sram import (sram_report, sram_tables, sram_total_fast,
                              sram_total_fast_batch)
 from repro.core.timing import (latency_cycles_fast, latency_cycles_fast_batch,
@@ -917,13 +922,8 @@ class CutpointEngine:
 # the batched scorer one tuple costs ~30us, so the worst case is a few
 # minutes serial and scales further with ``workers`` via search_pool --
 # pass ``workers`` when compiling detector-scale graphs.
-EXHAUSTIVE_LIMIT = 8_000_000
-
-# Cut tuples scored per ``CutpointEngine.score_batch`` call in the search
-# loops.  Large enough to amortize the numpy dispatch overhead of the 2-D
-# reductions across the batch (the win saturates around a few hundred),
-# small enough that the B x G mask/IO matrices stay cache-resident.
-DEFAULT_BATCH_SIZE = 1024
+# (EXHAUSTIVE_LIMIT / DEFAULT_BATCH_SIZE are re-exported from
+# core/options.py at the top of this module.)
 
 # Smallest subtree (number of completions under a shared cut prefix) worth
 # a ``prefix_bound`` call: a bound costs roughly one checkpointed run
@@ -1129,105 +1129,62 @@ def descent_starts(blocks: list[Block],
     return [all_row, all_frame, tuple(len(r) // 2 for r in runs)]
 
 
-def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
-           exhaustive_limit: int = EXHAUSTIVE_LIMIT,
-           workers: int | None = 1,
-           batch_size: int = DEFAULT_BATCH_SIZE,
-           replay: str = "journal",
-           max_retries: int = 2,
-           task_deadline_s: float | None = None,
-           resume_dir=None,
-           guard=None,
-           prune: bool = True,
-           count_pruned: bool = True) -> SearchResult:
+def valid_warm_start(cuts, runs: list[list[int]]) -> tuple[int, ...] | None:
+    """Validate a warm-start cut tuple against this graph's run structure.
+
+    Warm starts come from the compile service's plan cache (the nearest
+    cached plan of the same net family on a different hw config); they
+    are best-effort, so an incompatible tuple -- wrong arity, or a cut
+    past some run's length -- returns ``None`` instead of raising.
+    """
+    if cuts is None:
+        return None
+    cuts = tuple(int(c) for c in cuts)
+    if len(cuts) != len(runs):
+        return None
+    if any(not 0 <= c <= len(r) for c, r in zip(cuts, runs)):
+        return None
+    return cuts
+
+
+def search(gg: GroupedGraph, hw: FPGAConfig,
+           options: CompileOptions | None = None,
+           *, guard=None, warm_start=None, **legacy) -> SearchResult:
     """Find the best cut tuple for ``gg`` on ``hw``.
 
-    Knobs
-    -----
-    objective:
-        What "best" means; feasibility always dominates.  ``"latency"``
-        minimizes ``(infeasible, latency_cycles, sram_total)``, ``"sram"``
-        minimizes ``(infeasible, sram_total, latency_cycles)`` (paper
-        Fig. 16's minimum-SRAM point), ``"dram"`` minimizes ``(infeasible,
-        dram_total, latency_cycles)``.
-    exhaustive_limit:
-        Cut-product spaces up to this size are enumerated exhaustively
-        (guaranteed optimum); beyond it, coordinate descent with
-        deterministic restarts runs instead (exact in practice, because
-        runs interact only through shared buffer maxima).  Default
-        ``EXHAUSTIVE_LIMIT`` (8M tuples).
-    workers:
-        ``1`` (default) searches serially in-process.  ``N > 1`` farms
-        disjoint sub-spaces to ``N`` worker processes through
-        :class:`repro.core.search_pool.ParallelSearchDriver`; ``None``
-        uses ``os.cpu_count()``.  The result is bit-identical to serial
-        for every worker count -- parallelism changes wall clock only.
-    batch_size:
-        Cut tuples scored per ``CutpointEngine.score_batch`` call
-        (default ``DEFAULT_BATCH_SIZE``); ``1`` falls back to the
-        per-tuple ``evaluate`` loop.  Like ``workers``, this is purely a
-        wall-clock knob: the returned Candidate and the ``evaluated``
-        count are identical for every batch size.
-    replay:
-        Allocator-replay mode of the batched scorer: ``"journal"``
-        (default, checkpointed Python replay) or ``"device"`` (the
-        tensorized allocator scan of kernels/alloc_scan.py).  A third
-        purely wall-clock knob -- Candidates and ``evaluated`` are
-        byte-identical either way (tests/test_alloc_scan.py).
-    max_retries:
-        Re-dispatch budget per parallel task for transient failures (a
-        dead worker process, an injected ChaosError, a straggler
-        duplicate); see search_pool's failure semantics.  Irrelevant on
-        the serial path.
-    task_deadline_s:
-        Per-task wall-clock deadline enabling speculative straggler
-        re-dispatch in the pool (``None`` disables).  Wall-clock only.
-    resume_dir:
-        Directory for the task-granular completion journal: completed
-        sub-space tasks are committed there and skipped on re-run, so a
-        killed/preempted search resumes losing at most the in-flight
-        tasks.  Setting it forces the pooled path (even at
-        ``workers=1``) so journaling is always task-granular; the
-        resumed result is byte-identical to an uninterrupted run.
-    guard:
-        A :class:`repro.runtime.fault_tolerance.PreemptionGuard` the
-        pool polls for clean SIGTERM drain
-        (:class:`repro.core.search_pool.SearchPreempted`).
-    prune:
-        ``True`` (default) runs the exhaustive enumeration as exact
-        branch-and-bound (:func:`branch_bound_subspace`): sub-spaces
-        whose admissible prefix bound exceeds the incumbent are
-        eliminated before any replay.  The argmin cut and its metrics
-        are bit-identical to the unpruned search -- always -- and
-        ``SearchResult.pruned`` reports how much of the space was cut
-        away.  Coordinate descent is unaffected (a pruned trial could
-        never win its strict ``<`` improvement test, so there is
-        nothing to prune).
-    count_pruned:
-        ``True`` (default) keeps full-enumeration accounting:
-        ``evaluated`` counts pruned candidates as evaluated (scored +
-        pruned == the enumeration count with ``prune=False``), so
-        ``evaluated`` stays deterministic and identical across
-        ``prune``/``workers``/``batch_size``/``replay``.  ``False``
-        reports only actually-scored candidates -- under parallel
-        pruning that count legitimately varies with scheduling (later
-        tasks inherit better incumbents and score less).
+    All knobs arrive as one :class:`repro.core.options.CompileOptions`
+    value -- see that class for the per-field reference (the single
+    source of truth).  Loose keyword knobs (``workers=2`` etc.) still
+    work through the deprecation shim but emit
+    :class:`~repro.core.options.LegacyKnobWarning`.
+
+    ``guard`` (a live :class:`~repro.runtime.fault_tolerance.\
+PreemptionGuard` the pool polls for clean SIGTERM drain) and
+    ``warm_start`` (a cut tuple from the service's plan cache) are not
+    options: the former is a runtime object, the latter is derived
+    per-request state.  On the exhaustive path a valid ``warm_start`` is
+    scored through the direct oracle and seeds the branch-and-bound
+    incumbent -- the result stays bit-identical to a cold search
+    (including ``evaluated`` under the default ``count_pruned``
+    accounting) because an incumbent that is a real candidate's key can
+    never prune the product-order argmin.  On the coordinate-descent
+    path it is appended as an extra deterministic start: the result can
+    only improve, but ``evaluated`` (and, on ties, the argmin) may
+    differ from a cold search -- which is why the service only promises
+    hit/cold byte-identity for exhaustively-searched requests.
 
     Returns a :class:`SearchResult` whose ``best`` Candidate is
     materialized through the direct oracle, so it is exactly what the
     seed implementation produced for the same graph.
     """
-    if workers is None or workers > 1 or resume_dir is not None:
+    opts = resolve_options(options, legacy, site="search")
+    if opts.workers is None or opts.workers > 1 or opts.resume_dir is not None:
         from repro.core.search_pool import ParallelSearchDriver
-        with ParallelSearchDriver(workers=workers,
-                                  max_retries=max_retries,
-                                  task_deadline_s=task_deadline_s,
+        with ParallelSearchDriver(workers=opts.workers,
+                                  max_retries=opts.max_retries,
+                                  task_deadline_s=opts.task_deadline_s,
                                   guard=guard) as driver:
-            return driver.search(gg, hw, objective=objective,
-                                 exhaustive_limit=exhaustive_limit,
-                                 batch_size=batch_size, replay=replay,
-                                 resume_dir=resume_dir, prune=prune,
-                                 count_pruned=count_pruned)
+            return driver.search(gg, hw, opts, warm_start=warm_start)
 
     blocks = split_blocks(gg)
     runs = monotone_runs(blocks)
@@ -1235,7 +1192,9 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
     for r in runs:
         space *= len(r) + 1
 
-    engine = CutpointEngine(gg, hw, blocks, runs, replay=replay)
+    engine = CutpointEngine(gg, hw, blocks, runs, backend=opts.backend,
+                            replay=opts.replay)
+    objective, batch_size = opts.objective, opts.batch_size
 
     def materialize(best: CandidateMetrics,
                     pruned: int = 0) -> SearchResult:
@@ -1244,27 +1203,41 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
         # search would have produced.
         cand = evaluate(gg, blocks, runs, best.cuts, hw)
         evaluated = engine.evaluations
-        if count_pruned:
+        if opts.count_pruned:
             evaluated += pruned
         return SearchResult(best=cand, evaluated=evaluated,
                             runs=runs, blocks=blocks, pruned=pruned)
 
-    if space <= exhaustive_limit:
-        if space > 1_000_000 and not prune:
+    ws = valid_warm_start(warm_start, runs)
+    if space <= opts.exhaustive_limit:
+        if space > 1_000_000 and not opts.prune:
             warnings.warn(
                 f"exhaustive cut search over {space} tuples on a single "
-                f"core (~{space / 40_000 / 60:.0f} min); pass workers=N to "
-                f"search()/compile_graph() for a bit-identical result in "
-                f"1/N the time, or lower exhaustive_limit to fall back to "
-                f"coordinate descent", RuntimeWarning, stacklevel=2)
+                f"core (~{space / 40_000 / 60:.0f} min); pass "
+                f"CompileOptions(workers=N) to search()/compile_graph() "
+                f"for a bit-identical result in 1/N the time, or lower "
+                f"exhaustive_limit to fall back to coordinate descent",
+                RuntimeWarning, stacklevel=2)
+        # Warm start: price the cached cuts through the direct oracle
+        # (not the engine, so ``evaluations`` bookkeeping is untouched)
+        # and open branch-and-bound with that real candidate's key as
+        # the incumbent.  Admissibility + strict-> pruning guarantee the
+        # argmin still survives, so the result is bit-identical to a
+        # cold search -- the warm start only prunes more, earlier.
+        incumbent = None
+        if ws is not None and opts.prune:
+            incumbent = _key(evaluate(gg, blocks, runs, ws, hw), objective)
         # product order: the last run varies fastest, so consecutive tuples
         # share the longest possible checkpoint prefix; with prune=True
         # whole sub-spaces fall to the incumbent bound instead of being
         # walked at all
         best, pruned = branch_bound_subspace(
             engine, (), [len(r) for r in runs], objective,
-            batch_size=batch_size, prune=prune)
-        assert best is not None     # no external incumbent: never all-pruned
+            batch_size=batch_size, incumbent_key=incumbent,
+            prune=opts.prune)
+        # never all-pruned: any external incumbent is a candidate *inside*
+        # this space, whose own subtree no admissible bound can eliminate
+        assert best is not None
         return materialize(best, pruned)
 
     # Coordinate descent with deterministic restarts (descent_starts).
@@ -1272,8 +1245,13 @@ def search(gg: GroupedGraph, hw: FPGAConfig, objective: str = "latency",
     # same answer); the engine's memo absorbs the tuples revisited across
     # sweeps and restarts, and trials for a given run reuse the shared
     # allocation prefix of all earlier runs.
+    starts = descent_starts(blocks, runs)
+    if ws is not None and ws not in starts:
+        starts.append(ws)           # appended: ties still favor the cold
+        #                             starts, a warm start only ever wins
+        #                             by a strictly better key
     best = None
-    for start in descent_starts(blocks, runs):
+    for start in starts:
         cur = coordinate_descent(engine, start, objective,
                                  batch_size=batch_size)
         if best is None or _key(cur, objective) < _key(best, objective):

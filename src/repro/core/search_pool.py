@@ -85,8 +85,9 @@ the result says not just *what* won but *what it survived*.
 
 Checkpointed resume: with ``resume_dir`` set, every completed task's
 result is committed to a :class:`repro.checkpoint.checkpoint.TaskJournal`
-(atomic rename + digest, keyed by a content hash of graph/hw/objective/
-partition), journaled tasks are skipped on the next run with identical
+(atomic rename + digest, keyed by a content hash of graph/hw payload +
+``CompileOptions.plan_key()`` + partition -- never scheduling-only
+knobs), journaled tasks are skipped on the next run with identical
 merged results (including ``evaluated``), and a
 :class:`~repro.runtime.fault_tolerance.PreemptionGuard` wired into the
 driver (the ``guard`` knob) drains in-flight tasks on SIGTERM, journals
@@ -151,12 +152,13 @@ class FaultEvent:
 
 
 # ---------------------------------------------------------- worker globals
-# Engines per worker process, keyed by (search token, replay mode) --
-# rebuilt when the token changes (a fresh token per driver search keeps
-# each engine's memo in the exact state the serial implementation's fresh
-# engine has, which is what makes `evaluated` -- a cache-miss count --
-# reproducible).  The replay key exists because a device-replay task that
-# degrades mid-search needs a *separate* journal-replay engine.
+# Engines per worker process, keyed by (search token, replay mode, scoring
+# backend) -- rebuilt when the token changes (a fresh token per driver
+# search keeps each engine's memo in the exact state the serial
+# implementation's fresh engine has, which is what makes `evaluated` -- a
+# cache-miss count -- reproducible).  The replay key exists because a
+# device-replay task that degrades mid-search needs a *separate*
+# journal-replay engine.
 _ENGINES: dict = {}
 
 # Legacy test hook (predates runtime/chaos.py): set to "raise" / "exit" in
@@ -166,15 +168,17 @@ _TEST_FAIL_HOOK: str | None = None
 
 
 def _worker_engine(token: tuple, payload: bytes,
-                   replay: str = "journal") -> "_cp.CutpointEngine":
-    key = (token, replay)
+                   replay: str = "journal",
+                   backend: str = "numpy") -> "_cp.CutpointEngine":
+    key = (token, replay, backend)
     engine = _ENGINES.get(key)
     if engine is None:
         # a new search token invalidates engines of previous searches
         for old in [k for k in _ENGINES if k[0] != token]:
             del _ENGINES[old]
         gg, hw = pickle.loads(payload)
-        engine = _ENGINES[key] = _cp.CutpointEngine(gg, hw, replay=replay)
+        engine = _ENGINES[key] = _cp.CutpointEngine(gg, hw, backend=backend,
+                                                    replay=replay)
     return engine
 
 
@@ -206,10 +210,10 @@ def _run_subspace(task, attempt: int = 0):
     (bit-identical by contract) and reports a ``device_fallback`` event
     instead of failing the task.
     """
-    token, payload, prefix, suffix_dims, objective, batch_size, replay = \
-        task[:7]
-    prune = task[7] if len(task) > 7 else False
-    incumbent = task[8] if len(task) > 8 else None
+    (token, payload, prefix, suffix_dims, objective, batch_size, replay,
+     backend) = task[:8]
+    prune = task[8] if len(task) > 8 else False
+    incumbent = task[9] if len(task) > 9 else None
     _maybe_fail(prefix, attempt)
 
     def score(engine):
@@ -221,7 +225,7 @@ def _run_subspace(task, attempt: int = 0):
 
     events: tuple = ()
     try:
-        engine = _worker_engine(token, payload, replay)
+        engine = _worker_engine(token, payload, replay, backend)
         if replay == "device":
             # chaos site for injected backend failures (tests/benchmarks)
             _chaos.maybe_fire("device", prefix, attempt)
@@ -231,7 +235,7 @@ def _run_subspace(task, attempt: int = 0):
             raise
         # device backend raised: degrade to the journal replay -- logged,
         # never silent, and bit-identical by the replay contract
-        engine = _worker_engine(token, payload, "journal")
+        engine = _worker_engine(token, payload, "journal", backend)
         best, n, pruned = score(engine)
         events = (("device_fallback", f"device replay failed ({e!r}); "
                    f"journal replay substituted"),)
@@ -247,7 +251,7 @@ def _run_descent(task, attempt: int = 0):
     one the serial loop reaches from this start, by construction.  Device
     replay degradation mirrors ``_run_subspace``.
     """
-    token, payload, start, objective, batch_size, replay = task
+    token, payload, start, objective, batch_size, replay, backend = task
     _maybe_fail(start, attempt)
 
     def run(engine):
@@ -259,14 +263,14 @@ def _run_descent(task, attempt: int = 0):
 
     events: tuple = ()
     try:
-        engine = _worker_engine(token, payload, replay)
+        engine = _worker_engine(token, payload, replay, backend)
         if replay == "device":
             _chaos.maybe_fire("device", start, attempt)
         cur, visited = run(engine)
     except Exception as e:
         if replay != "device":
             raise
-        engine = _worker_engine(token, payload, "journal")
+        engine = _worker_engine(token, payload, "journal", backend)
         cur, visited = run(engine)
         events = (("device_fallback", f"device replay failed ({e!r}); "
                    f"journal replay substituted"),)
@@ -275,13 +279,13 @@ def _run_descent(task, attempt: int = 0):
 
 def _degrade_subspace(task):
     """Straggler duplicates always run the journal replay: if the device
-    backend is what's hanging, the rescue must not hang with it.  Prune
-    fields (if present) ride along unchanged."""
+    backend is what's hanging, the rescue must not hang with it.  Backend
+    and prune fields ride along unchanged."""
     return task[:6] + ("journal",) + task[7:]
 
 
 def _degrade_descent(task):
-    return task[:5] + ("journal",)
+    return task[:5] + ("journal",) + task[6:]
 
 
 # ----------------------------------------------------- journal record codec
@@ -440,19 +444,24 @@ class ParallelSearchDriver:
         self.close()
 
     # ------------------------------------------------- fault-tolerant loop
-    def _open_journal(self, resume_dir, payload: bytes, objective: str,
-                      mode: str, parts):
+    def _open_journal(self, resume_dir, payload: bytes, opts, mode: str,
+                      parts):
         """A TaskJournal keyed by the content hash of (graph+hw payload,
-        objective, partition) -- resuming is only legal when every one of
-        those matches; purely wall-clock knobs (batch_size, replay,
-        worker count at fixed partition) are deliberately excluded, since
-        results are bit-identical across them."""
+        ``CompileOptions.plan_key()``, partition) -- resuming is only
+        legal when every one of those matches; scheduling-only knobs
+        (batch_size, replay, worker count at fixed partition) are
+        deliberately excluded, since results are bit-identical across
+        them.  Keying on the full ``plan_key()`` (not just the objective,
+        as the first version of this journal did) is what keeps e.g. a
+        ``prune=True, count_pruned=False`` run from resuming off records
+        a ``prune=False`` run committed -- their per-task eval/pruned
+        splits differ, so cross-resuming would corrupt ``evaluated``."""
         # lazy: checkpoint.py pulls in jax/msgpack, which plain searches
         # never need
         from repro.checkpoint.checkpoint import TaskJournal
         h = hashlib.sha256()
         h.update(payload)
-        h.update(repr((objective, mode, parts)).encode())
+        h.update(repr((opts.plan_key(), mode, parts)).encode())
         return TaskJournal(resume_dir, h.hexdigest()[:16])
 
     def _run_tasks(self, fn, tasks: list, keys: list, events: list,
@@ -636,27 +645,25 @@ class ParallelSearchDriver:
             detail=f"preemption drain: {len(results)} task results kept"))
 
     # --------------------------------------------------------------- search
-    def search(self, gg, hw, objective: str = "latency",
-               exhaustive_limit: int | None = None,
+    def search(self, gg, hw, options=None, *,
                min_parallel_space: int = MIN_PARALLEL_SPACE,
-               batch_size: int | None = None,
-               replay: str = "journal",
-               resume_dir=None,
-               prune: bool = True,
-               count_pruned: bool = True):
+               warm_start=None, **legacy):
         """Parallel ``cutpoint.search``, bit-identical to the serial result.
 
-        Same knobs as :func:`repro.core.cutpoint.search` (including
-        ``batch_size``, which each worker forwards to
-        ``CutpointEngine.score_batch`` over its own sub-space, ``replay``,
-        which selects the journal vs device allocator replay inside each
-        worker's engine, and the branch-and-bound ``prune`` /
-        ``count_pruned`` pair); additionally ``min_parallel_space``
-        sets the space size below which the serial path runs directly
-        (the result is identical either way -- this is purely a
-        fixed-cost cutoff), and ``resume_dir`` opens the task journal for
-        checkpointed resume (which also forces the partitioned path, so
-        every task is journaled even on small spaces).
+        Knobs arrive as one :class:`repro.core.options.CompileOptions`
+        (the shared field reference lives there; loose keywords still
+        work through the deprecation shim).  The driver-level scheduling
+        fields -- ``workers``, ``max_retries``, ``task_deadline_s`` --
+        are fixed at driver construction and *ignored* on the options
+        value here: a driver is a process pool, not a per-call policy.
+        Additionally ``min_parallel_space`` sets the space size below
+        which the serial path runs directly (the result is identical
+        either way -- this is purely a fixed-cost cutoff), and
+        ``options.resume_dir`` opens the task journal for checkpointed
+        resume (which also forces the partitioned path, so every task is
+        journaled even on small spaces).  ``warm_start`` threads a
+        cached cut tuple through to the underlying search -- see
+        :func:`repro.core.cutpoint.search` for its exactness contract.
 
         With ``prune`` on, completed task results feed a shared incumbent
         (the best objective key seen so far); tasks dispatched later
@@ -666,44 +673,44 @@ class ParallelSearchDriver:
         unpruned serial search -- only ``SearchResult.pruned`` varies
         with scheduling.
         """
-        if exhaustive_limit is None:
-            exhaustive_limit = _cp.EXHAUSTIVE_LIMIT
-        if batch_size is None:
-            batch_size = _cp.DEFAULT_BATCH_SIZE
+        opts = _cp.resolve_options(options, legacy, site="driver.search")
         blocks = _cp.split_blocks(gg)
         runs = _cp.monotone_runs(blocks)
         space = 1
         for r in runs:
             space *= len(r) + 1
-        exhaustive = space <= exhaustive_limit
+        exhaustive = space <= opts.exhaustive_limit
         serial_ok = (self.workers <= 1 or not runs
                      or (exhaustive and space < min_parallel_space))
-        if not runs or (serial_ok and resume_dir is None):
-            return _cp.search(gg, hw, objective=objective,
-                              exhaustive_limit=exhaustive_limit,
-                              batch_size=batch_size, replay=replay,
-                              prune=prune, count_pruned=count_pruned)
+        if not runs or (serial_ok and opts.resume_dir is None):
+            # workers=1 + resume_dir=None keeps cutpoint.search on its
+            # serial path (it would otherwise bounce back to a driver)
+            return _cp.search(
+                gg, hw, opts.replace(workers=1, resume_dir=None),
+                warm_start=warm_start)
 
         if exhaustive:
             prefixes, suffix_dims = partition_space(
                 runs, self.workers * TASKS_PER_WORKER)
             return self.run_subspaces(
-                gg, hw, prefixes, suffix_dims, objective=objective,
-                batch_size=batch_size, replay=replay,
-                resume_dir=resume_dir, blocks=blocks, runs=runs,
-                prune=prune, count_pruned=count_pruned)
+                gg, hw, prefixes, suffix_dims, opts,
+                blocks=blocks, runs=runs, warm_start=warm_start)
 
         starts = _cp.descent_starts(blocks, runs)
+        ws = _cp.valid_warm_start(warm_start, runs)
+        if ws is not None and ws not in starts:
+            starts.append(ws)       # extra deterministic start, appended
+            #                         so ties still favor the cold starts
         self._searches += 1
-        token = (os.getpid(), id(self), self._searches, replay)
+        token = (os.getpid(), id(self), self._searches, opts.replay)
         payload = pickle.dumps((gg, hw), protocol=pickle.HIGHEST_PROTOCOL)
         events: list[FaultEvent] = []
         journal = None
-        if resume_dir is not None:
-            journal = self._open_journal(resume_dir, payload, objective,
+        if opts.resume_dir is not None:
+            journal = self._open_journal(opts.resume_dir, payload, opts,
                                          "descent", tuple(starts))
-        tasks = [(token, payload, s, objective, batch_size, replay)
-                 for s in starts]
+        tasks = [(token, payload, s, opts.objective, opts.batch_size,
+                  opts.replay, opts.backend) for s in starts]
         results = self._run_tasks(
             _run_descent, tasks, keys=starts, events=events,
             journal=journal, encode=_encode_descent,
@@ -714,20 +721,16 @@ class ParallelSearchDriver:
             for kind, detail in wev:
                 events.append(FaultEvent(kind, task=start, detail=detail))
             visited |= seen                 # start order; strict < as
-            if best is None or (_cp._key(m, objective)
-                                < _cp._key(best, objective)):
+            if best is None or (_cp._key(m, opts.objective)
+                                < _cp._key(best, opts.objective)):
                 best = m                    # the serial loop over starts
         cand = _cp.evaluate(gg, blocks, runs, best.cuts, hw)
         return _cp.SearchResult(best=cand, evaluated=len(visited),
                                 runs=runs, blocks=blocks, events=events)
 
-    def run_subspaces(self, gg, hw, prefixes, suffix_dims,
-                      objective: str = "latency",
-                      batch_size: int | None = None,
-                      replay: str = "journal",
-                      resume_dir=None, blocks=None, runs=None,
-                      prune: bool = True,
-                      count_pruned: bool = True):
+    def run_subspaces(self, gg, hw, prefixes, suffix_dims, options=None,
+                      *, blocks=None, runs=None, warm_start=None,
+                      **legacy):
         """Fault-tolerant exhaustive search over an explicit partition.
 
         ``search`` delegates the full-space exhaustive path here;
@@ -735,24 +738,35 @@ class ParallelSearchDriver:
         (e.g. the first N yolov2 prefixes) to run end-to-end through the
         retry/journal/deadline machinery on a bounded budget.  Returns a
         ``SearchResult`` over exactly the given sub-spaces.
+
+        A valid ``warm_start`` (with ``prune`` on) is priced through the
+        direct oracle and seeds the shared incumbent before the first
+        task is dispatched, so every task can prune against the cached
+        plan's key from its first batch.  Exactness is unchanged: the
+        incumbent is a real candidate's key inside this space, so the
+        strict ``>`` bound test can never eliminate the argmin, and
+        under ``count_pruned`` the ``evaluated`` accounting is identical
+        to a cold run.
         """
-        if batch_size is None:
-            batch_size = _cp.DEFAULT_BATCH_SIZE
+        opts = _cp.resolve_options(options, legacy,
+                                   site="driver.run_subspaces")
+        objective = opts.objective
         if blocks is None:
             blocks = _cp.split_blocks(gg)
         if runs is None:
             runs = _cp.monotone_runs(blocks)
         self._searches += 1
-        token = (os.getpid(), id(self), self._searches, replay)
+        token = (os.getpid(), id(self), self._searches, opts.replay)
         payload = pickle.dumps((gg, hw), protocol=pickle.HIGHEST_PROTOCOL)
         events: list[FaultEvent] = []
         journal = None
-        if resume_dir is not None:
+        if opts.resume_dir is not None:
             journal = self._open_journal(
-                resume_dir, payload, objective, "exhaustive",
+                opts.resume_dir, payload, opts, "exhaustive",
                 (tuple(suffix_dims), tuple(prefixes)))
         tasks = [(token, payload, p, tuple(suffix_dims), objective,
-                  batch_size, replay, prune, None) for p in prefixes]
+                  opts.batch_size, opts.replay, opts.backend, opts.prune,
+                  None) for p in prefixes]
         # Incumbent propagation: every completed (or journal-resumed) task
         # result tightens a shared best-so-far key; tasks submitted after
         # that inherit it via ``prepare`` and can prune against it from
@@ -760,6 +774,10 @@ class ParallelSearchDriver:
         # task can never be pruned by any incumbent, so the merge below is
         # unchanged regardless of completion order.
         inc_box: list = [None]
+        ws = _cp.valid_warm_start(warm_start, runs)
+        if ws is not None and opts.prune:
+            inc_box[0] = _cp._key(
+                _cp.evaluate(gg, blocks, runs, ws, hw), objective)
 
         def _observe(res) -> None:
             m = res[0]
@@ -771,14 +789,14 @@ class ParallelSearchDriver:
         def _prepare(task):
             if inc_box[0] is None:
                 return task
-            return task[:8] + (inc_box[0],)
+            return task[:9] + (inc_box[0],)
 
         results = self._run_tasks(
             _run_subspace, tasks, keys=list(prefixes), events=events,
             journal=journal, encode=_encode_subspace,
             decode=_decode_subspace, degrade=_degrade_subspace,
-            prepare=_prepare if prune else None,
-            observe=_observe if prune else None)
+            prepare=_prepare if opts.prune else None,
+            observe=_observe if opts.prune else None)
         evaluated = 0
         pruned_total = 0
         for prefix, (_m, nev, npr, wev) in zip(prefixes, results):
@@ -786,14 +804,17 @@ class ParallelSearchDriver:
             pruned_total += npr
             for kind, detail in wev:
                 events.append(FaultEvent(kind, task=prefix, detail=detail))
-        if count_pruned:
+        if opts.count_pruned:
             # scored + pruned per task == the task's tuple count, so the
             # sum is the full enumeration count the unpruned search
             # reports -- deterministic even though the split is not
             evaluated += pruned_total
         # (objective key, cut tuple) == first optimum in product order.
         # Fully-pruned tasks contribute no candidate; at least one task
-        # (the one owning the global optimum) always survives.
+        # always survives: the global optimum's own subtree bound never
+        # strictly exceeds any incumbent (including a warm-start seed,
+        # which is itself a candidate inside this space), so its task is
+        # never pruned whole.
         survivors = [m for m, _n, _p, _e in results if m is not None]
         assert survivors, "every sub-space pruned: bound/incumbent bug"
         best = min(survivors,

@@ -1,0 +1,32 @@
+"""Compile-as-a-service: a long-lived daemon serving ExecutionPlans from
+a persistent, content-addressed plan cache.
+
+Public surface:
+
+* :class:`~repro.service.daemon.CompileService` -- the daemon (bounded
+  request queue, coalescing, warm-started misses, per-ticket timing).
+* :class:`~repro.service.cache.PlanCache` -- the on-disk store (atomic
+  msgpack+zstd records, digest-verified, schema-versioned, LRU-bounded).
+* :func:`~repro.service.canonical.request_key` /
+  :func:`~repro.service.canonical.graph_fingerprint` -- deterministic
+  request hashing (insertion-order- and PYTHONHASHSEED-independent).
+* :func:`~repro.service.codec.encode_plan` /
+  :func:`~repro.service.codec.decode_plan` -- the ExecutionPlan codec
+  behind the byte-identity contract.
+
+See docs/architecture.md ("Compile service") for the design.
+"""
+from repro.service.cache import PlanCache
+from repro.service.canonical import (CACHE_SCHEMA_VERSION, canonical_graph,
+                                     graph_fingerprint, hw_signature,
+                                     request_key)
+from repro.service.codec import PlanCodecError, decode_plan, encode_plan
+from repro.service.daemon import (CompileService, ServiceClosed,
+                                  ServiceOverloaded, Ticket)
+
+__all__ = [
+    "CACHE_SCHEMA_VERSION", "CompileService", "PlanCache",
+    "PlanCodecError", "ServiceClosed", "ServiceOverloaded", "Ticket",
+    "canonical_graph", "decode_plan", "encode_plan", "graph_fingerprint",
+    "hw_signature", "request_key",
+]

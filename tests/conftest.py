@@ -15,6 +15,11 @@ from hypothesis_compat import HAVE_HYPOTHESIS, st  # noqa: E402
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+    # The repo's own call sites are fully migrated to CompileOptions; any
+    # legacy knob kwarg reaching resolve_options() from the test suite is
+    # a regression, so the deprecation warning is promoted to an error.
+    config.addinivalue_line(
+        "filterwarnings", "error::repro.core.options.LegacyKnobWarning")
 
 
 if HAVE_HYPOTHESIS:

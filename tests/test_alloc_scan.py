@@ -23,6 +23,7 @@ from repro.core.cutpoint import (CutpointEngine, evaluate, monotone_runs,
                                  search, split_blocks)
 from repro.core.grouping import group_nodes
 from repro.core.hw import KCU1500
+from repro.core.options import CompileOptions
 from repro.kernels.alloc_scan import alloc_scan_ref, pack_alloc_tables
 
 ALL_CNNS = ["vgg16-conv", "yolov2", "yolov3", "resnet50", "resnet152",
@@ -233,7 +234,7 @@ def test_device_and_journal_interleave_on_one_engine():
 def test_search_device_bit_identity_exhaustive():
     gg, _, _ = _grouped("resnet50")
     a = search(gg, KCU1500)
-    b = search(gg, KCU1500, replay="device")
+    b = search(gg, KCU1500, CompileOptions(replay="device"))
     assert a.best.cuts == b.best.cuts
     assert a.evaluated == b.evaluated
     for f in METRICS:
@@ -245,7 +246,7 @@ def test_search_device_bit_identity_exhaustive():
 def test_search_device_bit_identity_descent():
     gg, _, _ = _grouped("mobilenet-v3")
     a = search(gg, KCU1500)
-    b = search(gg, KCU1500, replay="device")
+    b = search(gg, KCU1500, CompileOptions(replay="device"))
     assert a.best.cuts == b.best.cuts
     assert a.evaluated == b.evaluated
     for f in METRICS:
@@ -255,7 +256,8 @@ def test_search_device_bit_identity_descent():
 def test_search_parallel_device_bit_identity():
     gg, _, _ = _grouped("resnet50")
     serial = search(gg, KCU1500)
-    parallel = search(gg, KCU1500, workers=2, replay="device")
+    parallel = search(gg, KCU1500,
+                      CompileOptions(workers=2, replay="device"))
     assert serial.best.cuts == parallel.best.cuts
     assert serial.evaluated == parallel.evaluated
     for f in METRICS:

@@ -25,15 +25,16 @@ from repro.analysis.diagnostics import CODES, make
 from repro.cnn import build_cnn
 from repro.core.compiler import compile_graph
 from repro.core.isa import OFFCHIP
+from repro.core.options import CompileOptions
 
 NETS = [("yolov2", 416), ("resnet50", 224), ("retinanet", 512)]
 AUDIT_LIMIT = 50_000
+AUDIT_OPTS = CompileOptions(exhaustive_limit=AUDIT_LIMIT)
 
 
 @pytest.fixture(scope="module")
 def plans():
-    return {name: compile_graph(build_cnn(name, size),
-                                exhaustive_limit=AUDIT_LIMIT)
+    return {name: compile_graph(build_cnn(name, size), options=AUDIT_OPTS)
             for name, size in NETS}
 
 
@@ -198,12 +199,12 @@ def test_simulator_detection_implies_static_kill(plans, cls):
 # --------------------------------------------------------- compiler knob
 def test_compile_verify_knob_off_strict():
     g = build_cnn("vgg16-conv", 224)
-    off = compile_graph(g, verify="off")
+    off = compile_graph(g, options=CompileOptions(verify="off"))
     assert off.diagnostics == []
-    strict = compile_graph(g, verify="strict")
+    strict = compile_graph(g, options=CompileOptions(verify="strict"))
     assert errors_of(strict.diagnostics) == []
     with pytest.raises(ValueError, match="verify"):
-        compile_graph(g, verify="loose")
+        compile_graph(g, options=CompileOptions(verify="loose"))
 
 
 # ------------------------------------------------------------------- CLI

@@ -32,12 +32,14 @@ from repro.core.cutpoint import (CutpointEngine, _key, branch_bound_subspace,
                                  search)
 from repro.core.grouping import group_nodes
 from repro.core.hw import KCU1500
+from repro.core.options import CompileOptions
 from repro.core.search_pool import ParallelSearchDriver, SearchPreempted
 from repro.runtime.fault_tolerance import PreemptionGuard
 
 from test_search_pool import ALL_CNNS, TEST_LIMIT, assert_results_identical
 
 OBJECTIVES = ["latency", "sram", "dram"]
+PRUNE_OPTS = CompileOptions(exhaustive_limit=TEST_LIMIT)
 
 
 @pytest.fixture(scope="module")
@@ -152,9 +154,8 @@ def test_bound_admissible_on_random_graphs(g, data):
 @pytest.mark.parametrize("name", ALL_CNNS)
 def test_pruned_search_identical_serial(name):
     gg = group_nodes(build_cnn(name))
-    unpruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                      prune=False)
-    pruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT, prune=True)
+    unpruned = search(gg, KCU1500, PRUNE_OPTS.replace(prune=False))
+    pruned = search(gg, KCU1500, PRUNE_OPTS)
     assert_results_identical(unpruned, pruned, ctx=f"serial-{name}")
     assert unpruned.pruned == 0
 
@@ -162,32 +163,27 @@ def test_pruned_search_identical_serial(name):
 @pytest.mark.parametrize("objective", OBJECTIVES)
 def test_pruned_search_identical_all_objectives(objective):
     gg = group_nodes(build_cnn("resnet50"))
-    unpruned = search(gg, KCU1500, objective=objective,
-                      exhaustive_limit=TEST_LIMIT, prune=False)
-    pruned = search(gg, KCU1500, objective=objective,
-                    exhaustive_limit=TEST_LIMIT, prune=True)
+    unpruned = search(gg, KCU1500,
+                      PRUNE_OPTS.replace(objective=objective, prune=False))
+    pruned = search(gg, KCU1500, PRUNE_OPTS.replace(objective=objective))
     assert_results_identical(unpruned, pruned, ctx=f"obj-{objective}")
     assert pruned.pruned > 0          # resnet50's space genuinely prunes
 
 
 def test_pruned_search_identical_workers2():
     gg = group_nodes(build_cnn("resnet50"))
-    unpruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                      prune=False)
-    pruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                    prune=True, workers=2)
+    unpruned = search(gg, KCU1500, PRUNE_OPTS.replace(prune=False))
+    pruned = search(gg, KCU1500, PRUNE_OPTS.replace(workers=2))
     assert_results_identical(unpruned, pruned, ctx="workers2")
 
 
 def test_pruned_search_identical_device_replay():
     gg = group_nodes(build_cnn("resnet50"))
-    unpruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                      prune=False)
-    pruned = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                    prune=True, replay="device")
+    unpruned = search(gg, KCU1500, PRUNE_OPTS.replace(prune=False))
+    pruned = search(gg, KCU1500, PRUNE_OPTS.replace(replay="device"))
     assert_results_identical(unpruned, pruned, ctx="device")
-    pruned2 = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                     prune=True, workers=2, replay="device")
+    pruned2 = search(gg, KCU1500,
+                     PRUNE_OPTS.replace(workers=2, replay="device"))
     assert_results_identical(unpruned, pruned2, ctx="device-workers2")
 
 
@@ -196,8 +192,9 @@ def test_pruned_search_identical_coordinate_descent():
     construction (a pruned trial could never win strict-< improvement):
     identical results, zero pruned."""
     gg = group_nodes(build_cnn("resnet50"))
-    unpruned = search(gg, KCU1500, exhaustive_limit=1, prune=False)
-    pruned = search(gg, KCU1500, exhaustive_limit=1, prune=True)
+    unpruned = search(gg, KCU1500,
+                      CompileOptions(exhaustive_limit=1, prune=False))
+    pruned = search(gg, KCU1500, CompileOptions(exhaustive_limit=1))
     assert_results_identical(unpruned, pruned, ctx="descent")
     assert pruned.pruned == 0
 
@@ -207,16 +204,14 @@ def test_pruned_search_resumes_after_preemption(tmp_path):
     resumed pruned search merges to the unpruned serial result, with the
     journal's partially-complete task set feeding the incumbent."""
     gg = group_nodes(build_cnn("resnet50"))
-    serial = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT, prune=False)
+    serial = search(gg, KCU1500, PRUNE_OPTS.replace(prune=False))
     guard = PreemptionGuard()
     guard.request()                        # SIGTERM already latched
     with ParallelSearchDriver(workers=2, guard=guard) as d:
         with pytest.raises(SearchPreempted, match="resume to finish"):
-            d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                     resume_dir=tmp_path, prune=True)
+            d.search(gg, KCU1500, PRUNE_OPTS.replace(resume_dir=tmp_path))
     with ParallelSearchDriver(workers=2) as d:
-        r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                     resume_dir=tmp_path, prune=True)
+        r = d.search(gg, KCU1500, PRUNE_OPTS.replace(resume_dir=tmp_path))
     assert_results_identical(serial, r, ctx="preempt-resume")
 
 
@@ -225,12 +220,9 @@ def test_count_pruned_accounting():
     count_pruned=False: evaluated counts only scored candidates, and
     scored + pruned == the enumeration count."""
     gg = group_nodes(build_cnn("resnet50"))
-    base = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                  prune=False)
-    counted = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                     prune=True, count_pruned=True)
-    raw = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                 prune=True, count_pruned=False)
+    base = search(gg, KCU1500, PRUNE_OPTS.replace(prune=False))
+    counted = search(gg, KCU1500, PRUNE_OPTS)
+    raw = search(gg, KCU1500, PRUNE_OPTS.replace(count_pruned=False))
     assert counted.evaluated == base.evaluated
     assert raw.evaluated + raw.pruned == base.evaluated
     assert raw.best.cuts == base.best.cuts

@@ -19,10 +19,12 @@ import signal
 import pytest
 
 from repro.cnn import build_cnn
+from repro.core import search_pool
 from repro.core.compiler import compile_graph
 from repro.core.cutpoint import monotone_runs, search, split_blocks
 from repro.core.grouping import group_nodes
 from repro.core.hw import KCU1500
+from repro.core.options import CompileOptions
 from repro.core.search_pool import (TASKS_PER_WORKER, ParallelSearchDriver,
                                     SearchPreempted, partition_space)
 from repro.runtime import chaos
@@ -41,6 +43,8 @@ needs_fork = pytest.mark.skipif(
 FUZZ_CNNS = ["vgg16-conv", "yolov3", "resnet50", "resnet152",
              "efficientnet-b1", "retinanet", "mobilenet-v3"]
 
+TEST_OPTS = CompileOptions(exhaustive_limit=TEST_LIMIT)
+
 
 @contextlib.contextmanager
 def injected(injector):
@@ -54,7 +58,7 @@ def injected(injector):
 @pytest.fixture(scope="module")
 def resnet():
     gg = group_nodes(build_cnn("resnet50"))
-    return gg, search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+    return gg, search(gg, KCU1500, TEST_OPTS)
 
 
 def resnet_prefixes(gg, workers=2):
@@ -161,7 +165,7 @@ def test_worker_kill_heals_pool_and_result_is_bit_identical(resnet):
     gg, serial = resnet
     with injected(chaos.ChaosInjector(seed=7, p_kill=0.08)):
         with ParallelSearchDriver(workers=2, mp_context="fork") as d:
-            r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+            r = d.search(gg, KCU1500, TEST_OPTS)
     assert_results_identical(serial, r, ctx="kill-retry")
     retries = [e for e in r.events if e.kind == "retry"]
     assert retries and all("died" in e.detail for e in retries)
@@ -172,7 +176,7 @@ def test_transient_raise_is_retried_and_bit_identical(resnet):
     gg, serial = resnet
     with injected(chaos.ChaosInjector(seed=3, p_raise=0.15)):
         with ParallelSearchDriver(workers=2, mp_context="fork") as d:
-            r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+            r = d.search(gg, KCU1500, TEST_OPTS)
     assert_results_identical(serial, r, ctx="transient-raise")
     retries = [e for e in r.events if e.kind == "retry"]
     assert retries and all("chaos" in e.detail for e in retries)
@@ -187,22 +191,31 @@ def test_exhausted_retries_raise_instead_of_hanging(resnet):
                                   max_retries=1) as d:
             with pytest.raises(RuntimeError,
                                match="worker process died"):
-                d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+                d.search(gg, KCU1500, TEST_OPTS)
     with injected(chaos.ChaosInjector(seed=3, p_raise=0.15,
                                       max_attempt=99)):
         with ParallelSearchDriver(workers=2, mp_context="fork",
                                   max_retries=1) as d:
             with pytest.raises(RuntimeError, match="failed after"):
-                d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+                d.search(gg, KCU1500, TEST_OPTS)
 
 
 @needs_fork
 def test_deterministic_worker_exception_is_never_retried(resnet):
+    """A worker exception without ``transient=True`` propagates unchanged
+    on the first attempt -- no retry events, no healing (invalid knob
+    values no longer reach workers at all: CompileOptions rejects them in
+    the caller)."""
     gg, _ = resnet
-    with ParallelSearchDriver(workers=2, mp_context="fork") as d:
-        with pytest.raises(ValueError):
-            d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                     objective="bogus")
+    search_pool._TEST_FAIL_HOOK = "raise"
+    try:
+        with ParallelSearchDriver(workers=2, mp_context="fork",
+                                  max_retries=5) as d:
+            with pytest.raises(RuntimeError,
+                               match="simulated worker failure"):
+                d.search(gg, KCU1500, TEST_OPTS)
+    finally:
+        search_pool._TEST_FAIL_HOOK = None
 
 
 # --------------------------------------------- deadlines & degradation
@@ -221,7 +234,7 @@ def test_straggler_duplicate_rescues_delayed_task(resnet):
         with ParallelSearchDriver(workers=2, mp_context="fork",
                                   task_deadline_s=0.5) as d:
             try:
-                r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+                r = d.search(gg, KCU1500, TEST_OPTS)
             finally:
                 release()
     assert_results_identical(serial, r, ctx="straggler")
@@ -238,8 +251,7 @@ def test_device_replay_falls_back_to_journal_loudly(resnet):
     ev = {("device", victim): chaos.ChaosEvent("raise")}
     with injected(chaos.ChaosInjector(events=ev)):
         with ParallelSearchDriver(workers=2, mp_context="fork") as d:
-            r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                         replay="device")
+            r = d.search(gg, KCU1500, TEST_OPTS.replace(replay="device"))
     assert_results_identical(serial, r, ctx="device-fallback")
     falls = [e for e in r.events if e.kind == "device_fallback"]
     assert [e.task for e in falls] == [victim]
@@ -263,15 +275,15 @@ def test_chaos_hold_gate_mechanics():
 def test_resume_skips_journaled_tasks_bit_identically(resnet, tmp_path):
     gg, serial = resnet
     with ParallelSearchDriver(workers=2) as d:
-        first = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                         resume_dir=tmp_path)
+        first = d.search(gg, KCU1500,
+                         TEST_OPTS.replace(resume_dir=tmp_path))
     assert_results_identical(serial, first, ctx="journal-first")
     assert not first.events               # clean run: nothing to report
     recs = list(tmp_path.glob("search_*/task_*.rec"))
     assert recs                           # every task committed a record
     with ParallelSearchDriver(workers=2) as d:
-        second = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                          resume_dir=tmp_path)
+        second = d.search(gg, KCU1500,
+                          TEST_OPTS.replace(resume_dir=tmp_path))
     assert_results_identical(serial, second, ctx="journal-second")
     resumed = [e for e in second.events if e.kind == "resume"]
     assert len(resumed) == len(recs)      # fully replayed from disk
@@ -292,13 +304,12 @@ def test_killed_compile_resumes_from_task_journal(resnet, tmp_path):
         with ParallelSearchDriver(workers=2, mp_context="fork",
                                   max_retries=1) as d:
             with pytest.raises(RuntimeError, match="worker process died"):
-                d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                         resume_dir=tmp_path)
+                d.search(gg, KCU1500,
+                         TEST_OPTS.replace(resume_dir=tmp_path))
     survivors = len(list(tmp_path.glob("search_*/task_*.rec")))
     assert survivors > 0
     with ParallelSearchDriver(workers=2, mp_context="fork") as d:
-        r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                     resume_dir=tmp_path)
+        r = d.search(gg, KCU1500, TEST_OPTS.replace(resume_dir=tmp_path))
     assert_results_identical(serial, r, ctx="resume-after-kill")
     assert len([e for e in r.events if e.kind == "resume"]) == survivors
 
@@ -309,11 +320,9 @@ def test_preemption_drains_and_resumes(resnet, tmp_path):
     guard.request()                       # SIGTERM already latched
     with ParallelSearchDriver(workers=2, guard=guard) as d:
         with pytest.raises(SearchPreempted, match="resume to finish"):
-            d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                     resume_dir=tmp_path)
+            d.search(gg, KCU1500, TEST_OPTS.replace(resume_dir=tmp_path))
     with ParallelSearchDriver(workers=2) as d:
-        r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                     resume_dir=tmp_path)
+        r = d.search(gg, KCU1500, TEST_OPTS.replace(resume_dir=tmp_path))
     assert_results_identical(serial, r, ctx="resume-after-preempt")
 
 
@@ -321,14 +330,12 @@ def test_corrupt_journal_record_raises_not_resumes(resnet, tmp_path):
     from repro.checkpoint.checkpoint import JournalError
     gg, _ = resnet
     with ParallelSearchDriver(workers=2) as d:
-        d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                 resume_dir=tmp_path)
+        d.search(gg, KCU1500, TEST_OPTS.replace(resume_dir=tmp_path))
     rec = sorted(tmp_path.glob("search_*/task_*.rec"))[0]
     rec.write_bytes(b"\x00garbage" + rec.read_bytes()[4:])
     with ParallelSearchDriver(workers=2) as d:
         with pytest.raises(JournalError, match="corrupt task-journal"):
-            d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                     resume_dir=tmp_path)
+            d.search(gg, KCU1500, TEST_OPTS.replace(resume_dir=tmp_path))
 
 
 def test_journal_keyed_by_search_content(resnet, tmp_path):
@@ -336,12 +343,12 @@ def test_journal_keyed_by_search_content(resnet, tmp_path):
     consulted for another -- the content hash separates them."""
     gg, _ = resnet
     with ParallelSearchDriver(workers=2) as d:
-        d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                 resume_dir=tmp_path)
-        serial_sram = search(gg, KCU1500, objective="sram",
-                             exhaustive_limit=TEST_LIMIT)
-        r = d.search(gg, KCU1500, objective="sram",
-                     exhaustive_limit=TEST_LIMIT, resume_dir=tmp_path)
+        d.search(gg, KCU1500, TEST_OPTS.replace(resume_dir=tmp_path))
+        serial_sram = search(gg, KCU1500,
+                             TEST_OPTS.replace(objective="sram"))
+        r = d.search(gg, KCU1500,
+                     TEST_OPTS.replace(objective="sram",
+                                       resume_dir=tmp_path))
     assert not [e for e in r.events if e.kind == "resume"]
     assert_results_identical(serial_sram, r, ctx="objective-keyed")
     assert len(list(tmp_path.glob("search_*"))) == 2
@@ -355,7 +362,7 @@ def test_fuzzed_chaos_preserves_bit_identity_across_zoo(name):
     and descent task shapes): whatever fires, the merged result must be
     byte-identical to the clean serial run."""
     gg = group_nodes(build_cnn(name))
-    serial = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+    serial = search(gg, KCU1500, TEST_OPTS)
     # stable per-net seed (Python's str hash is salted per process)
     seed = int(hashlib.sha256(name.encode()).hexdigest()[:4], 16)
     inj = chaos.ChaosInjector(seed=seed, p_kill=0.03, p_raise=0.05,
@@ -365,7 +372,7 @@ def test_fuzzed_chaos_preserves_bit_identity_across_zoo(name):
     # the hold-gate straggler test above).
     with injected(inj):
         with ParallelSearchDriver(workers=2, mp_context="fork") as d:
-            r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+            r = d.search(gg, KCU1500, TEST_OPTS)
     assert_results_identical(serial, r, ctx=f"fuzz-{name}")
 
 
@@ -379,15 +386,14 @@ def test_fuzzed_chaos_multi_seed_resume_round_trip(seed, tmp_path, resnet):
     with injected(inj):
         with ParallelSearchDriver(workers=2, mp_context="fork") as d:
             try:
-                r = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                             resume_dir=tmp_path)
+                r = d.search(gg, KCU1500,
+                             TEST_OPTS.replace(resume_dir=tmp_path))
             except RuntimeError:
                 r = None                  # retries exhausted: resume below
     if r is not None:
         assert_results_identical(serial, r, ctx=f"fuzz-seed{seed}")
     with ParallelSearchDriver(workers=2, mp_context="fork") as d:
-        r2 = d.search(gg, KCU1500, exhaustive_limit=TEST_LIMIT,
-                      resume_dir=tmp_path)
+        r2 = d.search(gg, KCU1500, TEST_OPTS.replace(resume_dir=tmp_path))
     assert_results_identical(serial, r2, ctx=f"fuzz-seed{seed}-resume")
 
 
@@ -395,16 +401,17 @@ def test_fuzzed_chaos_multi_seed_resume_round_trip(seed, tmp_path, resnet):
 @needs_fork
 def test_compile_graph_resume_dir_end_to_end(tmp_path):
     graph = build_cnn("resnet50")
-    clean = compile_graph(graph, KCU1500, exhaustive_limit=TEST_LIMIT,
-                          workers=2)
+    clean = compile_graph(graph, KCU1500, TEST_OPTS.replace(workers=2))
     doomed = resnet_prefixes(group_nodes(graph))[-1]
     ev = {("task", doomed): chaos.ChaosEvent("kill", max_attempt=99)}
     with injected(chaos.ChaosInjector(events=ev)):
         with pytest.raises(RuntimeError, match="worker process died"):
-            compile_graph(graph, KCU1500, exhaustive_limit=TEST_LIMIT,
-                          workers=2, max_retries=1, resume_dir=tmp_path)
-    plan = compile_graph(graph, KCU1500, exhaustive_limit=TEST_LIMIT,
-                         workers=2, resume_dir=tmp_path)
+            compile_graph(graph, KCU1500,
+                          TEST_OPTS.replace(workers=2, max_retries=1,
+                                            resume_dir=tmp_path))
+    plan = compile_graph(graph, KCU1500,
+                         TEST_OPTS.replace(workers=2,
+                                           resume_dir=tmp_path))
     assert plan.candidate.cuts == clean.candidate.cuts
     assert plan.latency.cycles == clean.latency.cycles
     assert plan.search.evaluated == clean.search.evaluated

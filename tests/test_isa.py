@@ -13,6 +13,7 @@ import pytest
 
 from repro.cnn import build_cnn
 from repro.core.compiler import compile_graph
+from repro.core.options import CompileOptions
 from repro.core.isa import (ACTS, FIELD_WIDTHS, MODES, OFFCHIP, OPCODES,
                             WORDS, GroupInstruction, decode_stream,
                             encode_stream, field_overflows)
@@ -124,7 +125,7 @@ def test_zoo_stream_round_trip():
     (this covers the sentinel encodings -1/-1 and OFFCHIP fields at
     scale)."""
     plan = compile_graph(build_cnn("resnet50", 224),
-                         exhaustive_limit=50_000)
+                         options=CompileOptions(exhaustive_limit=50_000))
     stream = encode_stream(plan.instructions)
     assert stream.size == WORDS * len(plan.instructions)
     assert decode_stream(stream) == plan.instructions

@@ -1,0 +1,148 @@
+"""The unified CompileOptions API (core/options.py) and its deprecation
+shim: field validation, the plan-affecting / scheduling-only split, the
+legacy-kwarg mapping, and the journal-key regression the split fixed
+(resume_dir journals keyed on ``plan_key()``, so pruned vs unpruned runs
+sharing a resume_dir can never cross-resume)."""
+import warnings
+
+import pytest
+
+from repro.cnn import build_cnn
+from repro.core.compiler import compile_graph
+from repro.core.cutpoint import search
+from repro.core.grouping import group_nodes
+from repro.core.hw import KCU1500
+from repro.core.options import (PLAN_FIELDS, SCHEDULE_FIELDS,
+                                CompileOptions, LegacyKnobWarning,
+                                resolve_options)
+from repro.core.search_pool import ParallelSearchDriver
+
+from test_search_pool import TEST_LIMIT, assert_results_identical
+
+TEST_OPTS = CompileOptions(exhaustive_limit=TEST_LIMIT)
+
+
+# ------------------------------------------------------------ dataclass
+def test_defaults_and_replace():
+    o = CompileOptions()
+    assert o.objective == "latency" and o.workers == 1
+    assert o.replace(workers=4).workers == 4
+    assert o.workers == 1                  # frozen: replace copies
+    with pytest.raises(Exception):         # FrozenInstanceError
+        o.workers = 2
+
+
+@pytest.mark.parametrize("bad", [
+    {"objective": "bogus"}, {"replay": "tape"}, {"backend": "cuda"},
+    {"verify": "loose"}, {"exhaustive_limit": -1}, {"batch_size": 0},
+    {"workers": 0}, {"max_retries": -1}, {"task_deadline_s": 0.0},
+])
+def test_validation_rejects_bad_values(bad):
+    with pytest.raises(ValueError):
+        CompileOptions(**bad)
+
+
+def test_plan_key_schedule_partition_all_fields():
+    """Every field is in exactly one of the two views; replacing a
+    scheduling field never changes plan_key() and vice versa."""
+    import dataclasses
+    names = {f.name for f in dataclasses.fields(CompileOptions)}
+    assert set(PLAN_FIELDS) | set(SCHEDULE_FIELDS) == names
+    assert not set(PLAN_FIELDS) & set(SCHEDULE_FIELDS)
+    base = CompileOptions()
+    sched = base.replace(workers=8, batch_size=2, replay="device",
+                         max_retries=0, verify="warn")
+    assert sched.plan_key() == base.plan_key()
+    assert sched.schedule() != base.schedule()
+    plan = base.replace(objective="sram", prune=False)
+    assert plan.plan_key() != base.plan_key()
+    assert plan.schedule() == base.schedule()
+
+
+def test_schedule_normalizes_resume_dir(tmp_path):
+    sched = dict(CompileOptions(resume_dir=tmp_path).schedule())
+    assert sched["resume_dir"] == str(tmp_path)
+
+
+def test_options_hashable_and_equal():
+    assert CompileOptions() == CompileOptions()
+    assert hash(CompileOptions(workers=2)) == hash(CompileOptions(workers=2))
+
+
+# ------------------------------------------------------------ the shim
+def test_legacy_kwargs_warn_and_map():
+    with pytest.warns(LegacyKnobWarning, match="compile_test"):
+        opts = resolve_options(None, {"workers": 3, "prune": False},
+                               site="compile_test")
+    assert opts == CompileOptions(workers=3, prune=False)
+
+
+def test_unknown_legacy_kwarg_is_type_error():
+    with pytest.raises(TypeError, match="nworkers"):
+        resolve_options(None, {"nworkers": 3}, site="s")
+
+
+def test_options_plus_legacy_is_type_error():
+    with pytest.raises(TypeError, match="not both"):
+        resolve_options(CompileOptions(), {"workers": 3}, site="s")
+
+
+def test_non_options_object_is_type_error():
+    with pytest.raises(TypeError, match="CompileOptions"):
+        resolve_options({"workers": 3}, {}, site="s")
+
+
+def test_entry_points_accept_legacy_spelling():
+    """All three entry points still accept the old loose kwargs (under a
+    LegacyKnobWarning) and produce the same plan as the options path."""
+    gg = group_nodes(build_cnn("vgg16-conv"))
+    via_opts = search(gg, KCU1500, TEST_OPTS)
+    with pytest.warns(LegacyKnobWarning):
+        via_legacy = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
+    assert_results_identical(via_opts, via_legacy, ctx="shim-search")
+    with pytest.warns(LegacyKnobWarning):
+        with ParallelSearchDriver(workers=2) as d:
+            via_driver = d.search(gg, KCU1500,
+                                  exhaustive_limit=TEST_LIMIT)
+    assert_results_identical(via_opts, via_driver, ctx="shim-driver")
+    g = build_cnn("vgg16-conv")
+    p1 = compile_graph(g, options=TEST_OPTS)
+    with pytest.warns(LegacyKnobWarning):
+        p2 = compile_graph(g, exhaustive_limit=TEST_LIMIT)
+    assert p1.candidate.cuts == p2.candidate.cuts
+    assert p1.latency.cycles == p2.latency.cycles
+
+
+def test_no_warning_on_options_path():
+    gg = group_nodes(build_cnn("vgg16-conv"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", LegacyKnobWarning)
+        search(gg, KCU1500, TEST_OPTS)
+
+
+# ----------------------------------------------- journal-key regression
+def test_journal_key_includes_plan_fields(tmp_path):
+    """Regression for the PR 6 journal key: a pruned and an unpruned
+    search sharing one resume_dir must write DIFFERENT journals -- the
+    old payload-only key made the second run resume the first run's
+    completed tasks and return its (differently-accounted) result."""
+    gg = group_nodes(build_cnn("resnet50"))
+    opts = TEST_OPTS.replace(workers=2, resume_dir=tmp_path)
+    pruned = search(gg, KCU1500, opts)
+    unpruned = search(gg, KCU1500, opts.replace(prune=False))
+    assert_results_identical(pruned, unpruned, ctx="journal-key")
+    assert unpruned.pruned == 0            # genuinely re-ran, not resumed
+    assert pruned.pruned > 0
+    journals = list(tmp_path.glob("*"))
+    assert len(journals) >= 2, (
+        f"pruned/unpruned shared a journal: {journals}")
+
+
+def test_journal_key_distinguishes_count_pruned(tmp_path):
+    gg = group_nodes(build_cnn("resnet50"))
+    opts = TEST_OPTS.replace(workers=2, resume_dir=tmp_path)
+    counted = search(gg, KCU1500, opts)
+    raw = search(gg, KCU1500, opts.replace(count_pruned=False))
+    assert counted.best.cuts == raw.best.cuts
+    assert raw.evaluated + raw.pruned == counted.evaluated
+    assert raw.evaluated < counted.evaluated

@@ -17,6 +17,7 @@ from repro.core.cutpoint import (CutpointEngine, evaluate, monotone_runs,
                                  search, split_blocks)
 from repro.core.grouping import group_nodes
 from repro.core.hw import KCU1500
+from repro.core.options import CompileOptions
 
 ALL_CNNS = ["vgg16-conv", "yolov2", "yolov3", "resnet50", "resnet152",
             "efficientnet-b1", "retinanet", "mobilenet-v3"]
@@ -172,8 +173,8 @@ def test_memoized_batch_matches_evaluate_bookkeeping():
 # ------------------------------------------------- search-level bit-identity
 def test_search_batched_equals_per_tuple_exhaustive():
     gg, _, _ = _grouped("resnet50")
-    a = search(gg, KCU1500, batch_size=1)
-    b = search(gg, KCU1500, batch_size=1024)
+    a = search(gg, KCU1500, CompileOptions(batch_size=1))
+    b = search(gg, KCU1500, CompileOptions(batch_size=1024))
     assert a.best.cuts == b.best.cuts
     assert a.evaluated == b.evaluated
     _assert_same(a.best, b.best, "search exhaustive")
@@ -186,8 +187,8 @@ def test_search_batched_equals_per_tuple_descent(name):
     """Coordinate-descent fallback: identical trajectory, memo and
     ``evaluated`` count with sweep pre-scoring on."""
     gg, _, _ = _grouped(name)
-    a = search(gg, KCU1500, batch_size=1)
-    b = search(gg, KCU1500, batch_size=512)
+    a = search(gg, KCU1500, CompileOptions(batch_size=1))
+    b = search(gg, KCU1500, CompileOptions(batch_size=512))
     assert a.best.cuts == b.best.cuts
     assert a.evaluated == b.evaluated
     _assert_same(a.best, b.best, name)
@@ -198,8 +199,9 @@ def test_search_parallel_batched_bit_identity():
     per-tuple SearchResult exactly (exhaustive path, space > the pool's
     min_parallel_space so it is actually partitioned)."""
     gg, _, _ = _grouped("resnet50")
-    serial = search(gg, KCU1500, batch_size=1)
-    parallel = search(gg, KCU1500, workers=2, batch_size=1024)
+    serial = search(gg, KCU1500, CompileOptions(batch_size=1))
+    parallel = search(gg, KCU1500,
+                      CompileOptions(workers=2, batch_size=1024))
     assert serial.best.cuts == parallel.best.cuts
     assert serial.evaluated == parallel.evaluated
     _assert_same(serial.best, parallel.best, "parallel+batched")
@@ -207,9 +209,11 @@ def test_search_parallel_batched_bit_identity():
 
 def test_search_parallel_batched_descent_bit_identity():
     gg, _, _ = _grouped("efficientnet-b1")
-    serial = search(gg, KCU1500, batch_size=1, exhaustive_limit=1000)
-    parallel = search(gg, KCU1500, workers=2, batch_size=512,
-                      exhaustive_limit=1000)
+    serial = search(gg, KCU1500,
+                    CompileOptions(batch_size=1, exhaustive_limit=1000))
+    parallel = search(gg, KCU1500,
+                      CompileOptions(workers=2, batch_size=512,
+                                     exhaustive_limit=1000))
     assert serial.best.cuts == parallel.best.cuts
     assert serial.evaluated == parallel.evaluated
     _assert_same(serial.best, parallel.best, "parallel descent+batched")

@@ -15,6 +15,7 @@ import pytest
 from repro.cnn import build_cnn
 from repro.core import search_pool
 from repro.core.cutpoint import search
+from repro.core.options import CompileOptions
 from repro.core.grouping import group_nodes
 from repro.core.hw import KCU1500
 from repro.core.search_pool import ParallelSearchDriver, partition_space
@@ -55,8 +56,9 @@ def assert_results_identical(serial, parallel, ctx=""):
 @pytest.mark.parametrize("name", ALL_CNNS)
 def test_parallel_matches_serial(name):
     gg = group_nodes(build_cnn(name))
-    serial = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT)
-    parallel = search(gg, KCU1500, exhaustive_limit=TEST_LIMIT, workers=2)
+    serial = search(gg, KCU1500, CompileOptions(exhaustive_limit=TEST_LIMIT))
+    parallel = search(gg, KCU1500,
+                      CompileOptions(exhaustive_limit=TEST_LIMIT, workers=2))
     assert_results_identical(serial, parallel, ctx=name)
 
 
@@ -65,8 +67,9 @@ def test_parallel_matches_serial_forced_coordinate_descent():
     space: one worker task per deterministic start, ties broken by start
     order, evaluated = |union of per-start visited tuples|."""
     gg = group_nodes(build_cnn("resnet50", 224))
-    serial = search(gg, KCU1500, exhaustive_limit=1)
-    parallel = search(gg, KCU1500, exhaustive_limit=1, workers=2)
+    serial = search(gg, KCU1500, CompileOptions(exhaustive_limit=1))
+    parallel = search(gg, KCU1500,
+                      CompileOptions(exhaustive_limit=1, workers=2))
     assert_results_identical(serial, parallel, ctx="forced-descent")
 
 
@@ -107,12 +110,12 @@ def test_driver_map_is_ordered_and_reusable():
         assert driver.map(abs, [-1]) == [1]
 
 
-def test_worker_exception_surfaces_as_error():
-    """An exception raised inside a worker (here: invalid objective, the
-    same ValueError the serial path raises) propagates to the caller."""
-    gg = group_nodes(build_cnn("resnet50", 224))
+def test_invalid_objective_rejected_before_dispatch():
+    """CompileOptions validates eagerly, so an invalid objective raises in
+    the caller before any worker is touched (deterministic worker
+    exceptions themselves are covered by the fault-tolerance suite)."""
     with pytest.raises(ValueError):
-        search(gg, KCU1500, objective="bogus", workers=2)
+        CompileOptions(objective="bogus")
 
 
 @pytest.mark.skipif(not HAS_FORK, reason="fork start method required to "

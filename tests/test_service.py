@@ -1,0 +1,336 @@
+"""The compile service (repro.service): deterministic request hashing,
+the ExecutionPlan codec's byte-identity contract, the persistent plan
+cache's commit/eviction/corruption discipline, warm-started misses'
+oracle-exactness, and the daemon's queueing/coalescing/failure
+semantics."""
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.cnn import build_cnn
+from repro.cnn.zoo import CNN_BUILDERS
+from repro.core.compiler import compile_graph
+from repro.core.hw import KCU1500, FPGAConfig
+from repro.core.ir import Graph, make_input
+from repro.core.isa import encode_stream
+from repro.core.options import CompileOptions
+from repro.service import (CACHE_SCHEMA_VERSION, CompileService, PlanCache,
+                           PlanCodecError, ServiceClosed, ServiceOverloaded,
+                           canonical_graph, decode_plan, encode_plan,
+                           graph_fingerprint, hw_signature, request_key)
+
+TEST_OPTS = CompileOptions(exhaustive_limit=50_000)
+
+
+def assert_plans_identical(a, b, ctx=""):
+    """The byte-identity contract the cache serves: every plan field the
+    contract covers, compared bit-for-bit."""
+    for f in ("cuts", "latency_cycles", "dram_total", "dram_fm",
+              "sram_total", "bram18k", "feasible", "policy"):
+        assert getattr(a.candidate, f) == getattr(b.candidate, f), (ctx, f)
+    for f in ("policy", "alloc_in", "alloc_out", "alloc_shortcut", "buff",
+              "side_buff", "spilled", "boundary_writes", "boundary_reads"):
+        assert getattr(a.alloc, f) == getattr(b.alloc, f), (ctx, f)
+    assert a.sram == b.sram, ctx
+    assert a.dram == b.dram, ctx
+    assert a.latency == b.latency, ctx
+    sa = encode_stream(a.instructions).tobytes() if a.instructions else b""
+    sb = encode_stream(b.instructions).tobytes() if b.instructions else b""
+    assert sa == sb, f"{ctx}: instruction streams differ"
+    assert a.diagnostics == b.diagnostics, ctx
+    # NOT compared: search.pruned and search.events -- run history, not
+    # plan content (a warm-started compile prunes more than a cold one
+    # while producing the identical plan); the codec drops both.
+    if a.search is not None or b.search is not None:
+        assert a.search.evaluated == b.search.evaluated, ctx
+
+
+# --------------------------------------------------------- canonical form
+def _shuffled_twin(name="vgg16-conv", size=64):
+    """The same net built twice: once via the zoo builder, once with its
+    node list re-inserted in a different (still topological) order --
+    here simply a field-identical rebuild with different names, plus a
+    rebuild where independent chains interleave differently."""
+    g1 = build_cnn(name, size)
+    g2 = Graph(g1.name + "-rebuilt")
+    g2.nodes = [n.clone(name=f"renamed_{n.idx}") for n in g1.nodes]
+    g2.validate()
+    return g1, g2
+
+
+def test_canonical_graph_ignores_names():
+    g1, g2 = _shuffled_twin()
+    assert canonical_graph(g1) == canonical_graph(g2)
+    assert graph_fingerprint(g1) == graph_fingerprint(g2)
+
+
+def test_canonical_graph_insertion_order_independent():
+    """Two topologically-valid insertion orders of the same diamond
+    (conv -> two parallel convs -> add) must canonicalize identically;
+    the two branches differ in kernel size so they are NOT automorphic
+    twins."""
+    def build(order):
+        g = Graph("diamond")
+        make_input(g, 16, 16)
+        g.add("conv", out_ch=8, k=3, act="relu")        # idx 1
+        stem = len(g.nodes) - 1
+        if order == "ab":
+            a = g.add("conv", inputs=[stem], out_ch=8, k=1, act="linear")
+            b = g.add("conv", inputs=[stem], out_ch=8, k=3, act="linear")
+        else:
+            b = g.add("conv", inputs=[stem], out_ch=8, k=3, act="linear")
+            a = g.add("conv", inputs=[stem], out_ch=8, k=1, act="linear")
+        g.add("add", inputs=[a.idx, b.idx])
+        g.validate()
+        return g
+
+    assert canonical_graph(build("ab")) == canonical_graph(build("ba"))
+    assert (request_key(build("ab"), KCU1500, TEST_OPTS)
+            == request_key(build("ba"), KCU1500, TEST_OPTS))
+
+
+def test_canonical_graph_distinguishes_add_operand_order():
+    """add's input order is semantic (inputs[1:] are the shortcut
+    operands): swapping main/shortcut must change the canonical form."""
+    def build(swap):
+        g = Graph("ops")
+        make_input(g, 16, 16)
+        g.add("conv", out_ch=8, k=3, act="relu")
+        entry = len(g.nodes) - 1
+        g.add("conv", out_ch=8, k=1, act="relu")
+        g.add("conv", out_ch=8, k=3, act="linear")
+        main = len(g.nodes) - 1
+        ins = [entry, main] if swap else [main, entry]
+        g.add("add", inputs=ins)
+        g.validate()
+        return g
+
+    assert canonical_graph(build(False)) != canonical_graph(build(True))
+
+
+def test_request_key_cross_process_stable(tmp_path):
+    """The hash must survive a fresh interpreter with a different
+    PYTHONHASHSEED -- nothing in the pipeline may depend on Python's
+    per-process hash randomization."""
+    code = (
+        "import sys; sys.path.insert(0, 'src'); sys.path.insert(0, 'tests')\n"
+        "from repro.cnn import build_cnn\n"
+        "from repro.core.hw import KCU1500\n"
+        "from repro.core.options import CompileOptions\n"
+        "from repro.service import request_key\n"
+        "print(request_key(build_cnn('mobilenet-v3', 64), KCU1500,\n"
+        "      CompileOptions(exhaustive_limit=50_000)))\n")
+    keys = set()
+    for seed in ("0", "12345"):
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            cwd=Path(__file__).resolve().parent.parent,
+            env={"PYTHONHASHSEED": seed, "PATH": "/usr/bin:/bin"})
+        assert out.returncode == 0, out.stderr
+        keys.add(out.stdout.strip())
+    assert len(keys) == 1
+    assert keys.pop() == request_key(build_cnn("mobilenet-v3", 64),
+                                     KCU1500, TEST_OPTS)
+
+
+def test_request_key_plan_fields_only():
+    g = build_cnn("vgg16-conv", 64)
+    base = request_key(g, KCU1500, TEST_OPTS)
+    sched = request_key(g, KCU1500, TEST_OPTS.replace(
+        workers=8, replay="device", verify="strict", batch_size=7))
+    assert sched == base
+    assert request_key(g, KCU1500, TEST_OPTS.replace(prune=False)) != base
+    assert request_key(g, KCU1500,
+                       TEST_OPTS.replace(objective="sram")) != base
+    hw2 = FPGAConfig(name="other", freq=KCU1500.freq, ti=KCU1500.ti,
+                     to=KCU1500.to * 2, mults_normal=KCU1500.mults_normal,
+                     mults_dw=KCU1500.mults_dw, dram_bw=KCU1500.dram_bw,
+                     bram18k_total=KCU1500.bram18k_total,
+                     sram_budget=KCU1500.sram_budget,
+                     group_overhead_cycles=KCU1500.group_overhead_cycles)
+    assert request_key(g, hw2, TEST_OPTS) != base
+
+
+# ----------------------------------------------------------------- codec
+@pytest.mark.parametrize("name", sorted(CNN_BUILDERS))
+def test_codec_round_trip_zoo(name):
+    g = build_cnn(name)
+    plan = compile_graph(g, options=TEST_OPTS)
+    back = decode_plan(encode_plan(plan), g, KCU1500)
+    assert_plans_identical(plan, back, ctx=f"codec-{name}")
+
+
+def test_codec_rejects_garbage_and_stale_schema():
+    with pytest.raises(PlanCodecError, match="undecodable"):
+        decode_plan(b"not msgpack at all", build_cnn("vgg16-conv", 64),
+                    KCU1500)
+    import msgpack
+    stale = msgpack.packb({"v": CACHE_SCHEMA_VERSION + 1})
+    with pytest.raises(PlanCodecError, match="schema"):
+        decode_plan(stale, build_cnn("vgg16-conv", 64), KCU1500)
+
+
+# ----------------------------------------------------------------- cache
+def test_cache_put_get_and_digest_check(tmp_path):
+    c = PlanCache(tmp_path)
+    c.put("a" * 64, b"payload", meta={"x": 1})
+    assert ("a" * 64) in c and len(c) == 1
+    assert c.get("a" * 64) == b"payload"
+    # flip a byte: digest check must turn the record into a miss AND
+    # delete it
+    rec = next(tmp_path.glob("plan_*.rec"))
+    blob = bytearray(rec.read_bytes())
+    blob[-1] ^= 0xFF
+    rec.write_bytes(bytes(blob))
+    assert c.get("a" * 64) is None
+    assert len(c) == 0
+
+
+def test_cache_lru_eviction(tmp_path):
+    c = PlanCache(tmp_path, capacity=2)
+    c.put("k1" + "0" * 62, b"one", meta={})
+    time.sleep(0.02)
+    c.put("k2" + "0" * 62, b"two", meta={})
+    time.sleep(0.02)
+    assert c.get("k1" + "0" * 62) == b"one"   # touch: k2 is now LRU
+    time.sleep(0.02)
+    c.put("k3" + "0" * 62, b"three", meta={})
+    assert len(c) == 2
+    assert c.get("k2" + "0" * 62) is None
+    assert c.get("k1" + "0" * 62) == b"one"
+    assert c.get("k3" + "0" * 62) == b"three"
+
+
+def test_cache_nearest_same_family_closest_hw(tmp_path):
+    c = PlanCache(tmp_path)
+    sig_near = [["ti", 16], ["to", 32], ["sram_budget", 4_000_000]]
+    sig_far = [["ti", 16], ["to", 32], ["sram_budget", 16_000_000]]
+    c.put("n1" + "0" * 62, b"x",
+          meta={"graph_fp": "famA", "hw_sig": sig_near, "cuts": [1, 2]})
+    c.put("n2" + "0" * 62, b"x",
+          meta={"graph_fp": "famA", "hw_sig": sig_far, "cuts": [3, 4]})
+    c.put("n3" + "0" * 62, b"x",
+          meta={"graph_fp": "famB", "hw_sig": sig_near, "cuts": [9, 9]})
+    query = [["ti", 16], ["to", 32], ["sram_budget", 5_000_000]]
+    assert c.nearest("famA", query) == (1, 2)
+    assert c.nearest("famC", query) is None
+
+
+# ---------------------------------------------------------------- daemon
+def test_service_hit_is_byte_identical_to_cold_compile(tmp_path):
+    g = build_cnn("mobilenet-v3", 64)
+    cold = compile_graph(g, options=TEST_OPTS)
+    with CompileService(tmp_path, options=TEST_OPTS) as svc:
+        miss = svc.compile(g)
+        hit = svc.compile(g)
+        assert svc.stats["misses"] == 1 and svc.stats["hits"] == 1
+    assert_plans_identical(cold, miss, ctx="cold-vs-miss")
+    assert_plans_identical(cold, hit, ctx="cold-vs-hit")
+    assert encode_plan(cold) == encode_plan(hit)
+
+
+def test_service_hit_survives_restart_and_strict_verify(tmp_path):
+    g = build_cnn("vgg16-conv", 64)
+    with CompileService(tmp_path, options=TEST_OPTS) as svc:
+        svc.compile(g)
+    with CompileService(tmp_path, options=TEST_OPTS) as svc:
+        t = svc.submit(g, options=TEST_OPTS.replace(verify="strict"))
+        plan = t.result(timeout=60)
+        assert t.hit
+        assert plan.diagnostics is not None
+        assert svc.stats["hits"] == 1 and svc.stats["misses"] == 0
+
+
+def test_service_warm_start_exact_on_new_hw(tmp_path):
+    """A miss for a known net on a NEW hw config warm-starts from the
+    nearest cached plan and must still return the oracle-exact argmin:
+    bit-identical (including `evaluated`) to a cold compile_graph."""
+    g = build_cnn("resnet50", 64)
+    hw2 = FPGAConfig(name="kcu1500-smallsram", freq=KCU1500.freq,
+                     ti=KCU1500.ti, to=KCU1500.to,
+                     mults_normal=KCU1500.mults_normal,
+                     mults_dw=KCU1500.mults_dw, dram_bw=KCU1500.dram_bw,
+                     bram18k_total=KCU1500.bram18k_total,
+                     sram_budget=KCU1500.sram_budget // 2,
+                     group_overhead_cycles=KCU1500.group_overhead_cycles)
+    cold = compile_graph(g, hw2, options=TEST_OPTS)
+    with CompileService(tmp_path, options=TEST_OPTS) as svc:
+        svc.compile(g)                         # seeds the family record
+        t = svc.submit(g, hw2)
+        warm = t.result(timeout=120)
+        assert not t.hit and t.warm_started
+        assert svc.stats["warm_starts"] == 1
+    assert_plans_identical(cold, warm, ctx="warm-vs-cold")
+
+
+def test_service_coalesces_identical_inflight_requests(tmp_path):
+    g = build_cnn("vgg16-conv", 64)
+    with CompileService(tmp_path, options=TEST_OPTS) as svc:
+        t1 = svc.submit(g)
+        t2 = svc.submit(g)
+        assert t1 is t2
+        assert svc.stats["coalesced"] == 1
+        p1 = t1.result(timeout=60)
+        # after completion the key is no longer in-flight: a resubmit is
+        # a fresh ticket served from the cache
+        t3 = svc.submit(g)
+        assert t3 is not t1
+        p3 = t3.result(timeout=60)
+    assert_plans_identical(p1, p3, ctx="coalesce")
+
+
+def test_service_overload_backpressure(tmp_path):
+    """A full bounded queue rejects at submit() -- the daemon never
+    buffers unboundedly.  A gate stalls the single worker so the queue
+    genuinely fills."""
+    gate = threading.Event()
+    started = threading.Event()
+    nets = [build_cnn(n, 64) for n in ("vgg16-conv", "mobilenet-v3",
+                                       "resnet50", "yolov2")]
+    with CompileService(tmp_path, options=TEST_OPTS, max_pending=2,
+                        threads=1) as svc:
+        orig = svc._fulfil
+
+        def stalled(ticket, graph, hw, opts):
+            started.set()
+            gate.wait(timeout=30)
+            return orig(ticket, graph, hw, opts)
+
+        svc._fulfil = stalled
+        tickets = [svc.submit(nets[0])]
+        # wait for the worker to dequeue the first request, then fill
+        # the 2-slot queue exactly
+        assert started.wait(timeout=30)
+        tickets += [svc.submit(nets[1]), svc.submit(nets[2])]
+        with pytest.raises(ServiceOverloaded, match="retry with backoff"):
+            svc.submit(nets[3])
+        assert svc.stats["overloads"] == 1
+        gate.set()
+        for t in tickets:
+            t.result(timeout=120)
+
+
+def test_service_failure_fails_ticket_not_daemon(tmp_path):
+    bad = Graph("bad")                 # no input node: compile must fail
+    g = build_cnn("vgg16-conv", 64)
+    with CompileService(tmp_path, options=TEST_OPTS) as svc:
+        t = svc.submit(bad)
+        with pytest.raises(Exception):
+            t.result(timeout=60)
+        assert svc.stats["failures"] == 1
+        assert len(svc.cache) == 0     # nothing cached on failure
+        # the daemon keeps serving
+        svc.compile(g)
+        assert svc.stats["misses"] == 2
+
+
+def test_service_closed_rejects_submit(tmp_path):
+    svc = CompileService(tmp_path, options=TEST_OPTS)
+    svc.close()
+    with pytest.raises(ServiceClosed):
+        svc.submit(build_cnn("vgg16-conv", 64))
+    svc.close()                        # idempotent

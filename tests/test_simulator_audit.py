@@ -14,6 +14,7 @@ from repro.cnn import build_cnn
 from repro.core.compiler import (all_frame_policy, all_row_policy,
                                  compile_graph)
 from repro.core.grouping import group_nodes
+from repro.core.options import CompileOptions
 from repro.core.simulator import simulate
 
 ZOO = [("vgg16-conv", 224), ("yolov2", 416), ("yolov3", 416),
@@ -24,6 +25,7 @@ ZOO = [("vgg16-conv", 224), ("yolov2", 416), ("yolov3", 416),
 # whole-zoo audit stays a tier-1-friendly few seconds; the plan is a real
 # optimizer output either way.
 AUDIT_LIMIT = 50_000
+AUDIT_OPTS = CompileOptions(exhaustive_limit=AUDIT_LIMIT)
 
 
 def _audit(plan, ctx):
@@ -38,8 +40,7 @@ def _audit(plan, ctx):
 
 @pytest.mark.parametrize("name,size", ZOO)
 def test_fm_counters_match_model_on_compiled_plan(name, size):
-    plan = compile_graph(build_cnn(name, size),
-                         exhaustive_limit=AUDIT_LIMIT)
+    plan = compile_graph(build_cnn(name, size), options=AUDIT_OPTS)
     _audit(plan, f"{name}@{size} optimized")
 
 
@@ -60,7 +61,7 @@ def test_compiled_plan_verifies_strict(name, size):
     optimizer's feasibility contract deliberately does not constrain and
     which mirrors the plan's own ``sram_report``."""
     plan = compile_graph(build_cnn(name, size),
-                         exhaustive_limit=AUDIT_LIMIT, verify="strict")
+                         options=AUDIT_OPTS.replace(verify="strict"))
     assert [d for d in plan.diagnostics if d.severity.value == "error"] \
         == []
     assert {d.code for d in plan.diagnostics} <= {"SF031"}, (
@@ -73,8 +74,8 @@ def test_compiled_plan_verifies_strict_device_replay(name, size):
     """The device-replay search path produces the same verifiable plan:
     strict verification holds on both allocator replay engines."""
     plan = compile_graph(build_cnn(name, size),
-                         exhaustive_limit=AUDIT_LIMIT, replay="device",
-                         verify="strict")
+                         options=AUDIT_OPTS.replace(replay="device",
+                                                    verify="strict"))
     assert [d for d in plan.diagnostics if d.severity.value == "error"] \
         == []
 
@@ -82,8 +83,7 @@ def test_compiled_plan_verifies_strict_device_replay(name, size):
 def test_dry_run_counts_no_dangling_reads():
     """The dynamic twin of the static availability checks: a healthy
     plan's dry run never reads a DRAM tensor nothing wrote."""
-    plan = compile_graph(build_cnn("retinanet", 512),
-                         exhaustive_limit=AUDIT_LIMIT)
+    plan = compile_graph(build_cnn("retinanet", 512), options=AUDIT_OPTS)
     _, counters = simulate(plan.grouped, plan.alloc, plan.instructions,
                            execute=False)
     assert counters.dangling_reads == 0
