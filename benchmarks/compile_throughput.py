@@ -17,7 +17,13 @@ with the PR 3 per-tuple engine rate as the committed reference point; an
 **allocator-replay comparison** (``alloc_replay``): the same slice scored
 under the journal Python replay vs the tensorized device replay of
 kernels/alloc_scan.py (numpy reference / jax scan / Pallas interpret);
-a **workers sweep**: the same kind of slice pushed through the search
+a **fused-pipeline comparison** (``pipeline_slice``): the same slice
+searched end-to-end under ``engine="pipeline:lax"`` /
+``"pipeline:reference"`` (kernels/search_pipeline.py -- in-kernel
+enumeration, alloc-scan replay, cost reduction and hierarchical argmin,
+no host candidate stream) vs the journal engine, argmin and evaluation
+counts asserted identical; a **workers sweep**: the same kind of slice
+pushed through the search
 pool at 1/2/4/8 workers; and a **pruning benchmark** (``prune``): the
 FULL yolov2 space searched unpruned vs branch-and-bound pruned vs
 kill-healed at 2 workers, byte-identity asserted, recording the pruned
@@ -125,7 +131,7 @@ def bench_workers_sweep(name: str, size: int, worker_counts: list[int],
     for w in worker_counts:
         token = ("sweep", name, size, w)
         tasks = [(token, payload, p, suffix_dims, "latency",
-                  DEFAULT_BATCH_SIZE, "journal") for p in prefixes]
+                  DEFAULT_BATCH_SIZE, "journal", "numpy") for p in prefixes]
         t0 = time.perf_counter()
         if w == 1:
             results = [_run_subspace(t) for t in tasks]
@@ -193,7 +199,7 @@ def bench_batched_slice(name: str = "yolov2", size: int = 416,
         for mode, bs in modes:
             token = ("slice", name, size, mode, rep)
             tasks = [(token, payload, p, suffix_dims, "latency", bs,
-                      "journal") for p in prefixes]
+                      "journal", "numpy") for p in prefixes]
             t0 = time.perf_counter()
             results = [_run_subspace(t) for t in tasks]
             wall = time.perf_counter() - t0
@@ -299,6 +305,143 @@ def bench_alloc_replay(name: str = "yolov2", size: int = 416,
                 "contract); pallas_interpret is un-compiled kernel "
                 "emulation measured on a few batches",
     }
+
+
+def bench_pipeline_slice(name: str = "yolov2", size: int = 416,
+                         n_tasks: int = 8, reps: int = 2) -> dict:
+    """Fused-pipeline throughput on the fixed yolov2 slice: the same
+    sub-spaces as ``batched_slice`` searched under
+    ``engine="pipeline:lax"`` (the production fused on-device loop) and
+    ``engine="pipeline:reference"`` (its numpy oracle), against the
+    journal engine measured in the same run.
+
+    Every mode runs the identical ``_run_subspace`` worker body the
+    parallel search dispatches, interleaved best-of per mode; the argmin
+    AND the per-task evaluation counts are asserted identical across
+    engines (the pipeline scores everything in-kernel, so its count
+    equals journal scored+pruned under the unpruned walk used here)."""
+    gg = group_nodes(build_cnn(name, size))
+    blocks = split_blocks(gg)
+    runs = monotone_runs(blocks)
+    prefixes, suffix_dims = partition_space(runs, target_tasks=64)
+    prefixes = prefixes[:n_tasks]
+    task_size = 1
+    for d in suffix_dims:
+        task_size *= d + 1
+    tuples = len(prefixes) * task_size
+    payload = pickle.dumps((gg, KCU1500), protocol=pickle.HIGHEST_PROTOCOL)
+
+    modes = ["journal", "pipeline:reference", "pipeline:lax"]
+    best_eps = {m: 0.0 for m in modes}
+    argmins = set()
+    counts = set()
+    for rep in range(reps):
+        for mode in modes:
+            token = ("pipe", name, size, mode, rep)
+            tasks = [(token, payload, p, suffix_dims, "latency",
+                      DEFAULT_BATCH_SIZE, mode, "numpy") for p in prefixes]
+            t0 = time.perf_counter()
+            results = [_run_subspace(t) for t in tasks]
+            wall = time.perf_counter() - t0
+            evals = sum(n for _, n, _p, _e in results)
+            assert evals == tuples, (mode, evals, tuples)
+            counts.add(tuple(n for _, n, _p, _e in results))
+            best = min((m for m, _n, _p, _e in results),
+                       key=lambda m: (_key(m, "latency"), m.cuts))
+            argmins.add(best.cuts)
+            eps = evals / wall
+            best_eps[mode] = max(best_eps[mode], eps)
+            print(f"pipeline slice {name} rep{rep} {mode}: "
+                  f"{wall:.1f}s {eps:.0f} evals/s")
+    assert len(argmins) == 1, "pipeline/journal argmin must agree"
+    assert len(counts) == 1, "pipeline/journal eval counts must agree"
+    speedup = best_eps["pipeline:lax"] / best_eps["journal"]
+    print(f"pipeline slice: lax {speedup:.2f}x vs same-run journal")
+    return {
+        "network": f"{name}@{size}",
+        "tuples": tuples,
+        "tasks": len(prefixes),
+        "batch_size": DEFAULT_BATCH_SIZE,
+        "reps": reps,
+        "evals_per_sec": {m: round(r, 1) for m, r in best_eps.items()},
+        "lax_speedup_vs_journal": round(speedup, 2),
+        "note": "same fixed yolov2 slice as batched_slice, searched "
+                "through _run_subspace under each engine; argmin and "
+                "per-task evaluation counts asserted identical "
+                "(tests/test_search_pipeline.py proves the contract)",
+    }
+
+
+def smoke_pipeline_gate(committed_path: Path | None) -> dict:
+    """CI gate for the fused pipeline: on a small fixed yolov2 slice the
+    ``pipeline:lax`` engine must (a) merge to the byte-identical argmin
+    and evaluation counts as the journal engine, and (b) keep its
+    evals/sec within ``max_regression`` of the committed
+    ``pipeline_floor``, normalized by the busy-loop calibration (same
+    discipline as the batched-scorer gate)."""
+    gg = group_nodes(build_cnn("yolov2", 416))
+    blocks = split_blocks(gg)
+    runs = monotone_runs(blocks)
+    prefixes, suffix_dims = partition_space(runs, target_tasks=256)
+    prefixes = prefixes[:2]
+    payload = pickle.dumps((gg, KCU1500), protocol=pickle.HIGHEST_PROTOCOL)
+    rate = measure_busyloop_rate()
+
+    outcomes = {}
+    for mode in ("journal", "pipeline:lax"):
+        tasks = [(("pipe-smoke", mode), payload, p, suffix_dims,
+                  "latency", DEFAULT_BATCH_SIZE, mode, "numpy")
+                 for p in prefixes]
+        # warm-up pass: triggers the engine build and (for the pipeline)
+        # the one jit compile per sub-space shape, so the timed pass
+        # measures steady-state throughput -- the thing the floor gates
+        # -- not fixed compile latency that busy-loop normalization
+        # cannot scale
+        [_run_subspace(t) for t in tasks]
+        t0 = time.perf_counter()
+        results = [_run_subspace(t) for t in tasks]
+        wall = time.perf_counter() - t0
+        evals = sum(n for _, n, _p, _e in results)
+        best = min((m for m, _n, _p, _e in results),
+                   key=lambda m: (_key(m, "latency"), m.cuts))
+        outcomes[mode] = (best.cuts, evals, evals / wall)
+    assert outcomes["journal"][:2] == outcomes["pipeline:lax"][:2], \
+        "pipeline argmin/evaluated diverged from journal"
+    measured = outcomes["pipeline:lax"][2]
+    record: dict = {
+        "network": "yolov2@416",
+        "tuples": outcomes["journal"][1],
+        "busyloop_ops_per_sec": round(rate, 1),
+        "journal_evals_per_sec": round(outcomes["journal"][2], 1),
+        "pipeline_evals_per_sec": round(measured, 1),
+        "bit_identical": True,               # asserted above
+    }
+    floor = None
+    if committed_path is not None and committed_path.exists():
+        floor = json.loads(committed_path.read_text()).get("pipeline_floor")
+    if not floor:
+        print("pipeline gate: no committed pipeline_floor -- "
+              "measuring only")
+        return record
+    speed = rate / floor["busyloop_ops_per_sec"]
+    need = floor["pipeline_evals_per_sec"] * speed \
+        * (1 - floor["max_regression"])
+    record.update({
+        "floor_evals_per_sec": floor["pipeline_evals_per_sec"],
+        "machine_speed_vs_floor": round(speed, 3),
+        "required_evals_per_sec": round(need, 1),
+        "passed": measured >= need,
+    })
+    if record["passed"]:
+        print(f"pipeline gate OK: {measured:.0f} evals/s >= {need:.0f} "
+              f"required (machine speed {speed:.2f}x vs floor)")
+    else:
+        record["fail_msg"] = (
+            f"pipeline regression gate: measured {measured:.0f} evals/s "
+            f"< required {need:.0f} (committed floor "
+            f"{floor['pipeline_evals_per_sec']:.0f} x machine speed "
+            f"{speed:.2f} x {1 - floor['max_regression']:.2f})")
+    return record
 
 
 def bench_chaos(name: str = "yolov2", size: int = 416,
@@ -605,7 +748,7 @@ def bench_network(name: str, size: int, budget_s: float,
         fresh = CutpointEngine(gg, KCU1500, blocks, runs)
         fresh_b = CutpointEngine(gg, KCU1500, blocks, runs)
         fresh_d = CutpointEngine(gg, KCU1500, blocks, runs,
-                                 replay="device")
+                                 engine="device")
         sample = list(itertools.islice(_product_tuples(runs), 10))
         for cuts, m_b, m_d in zip(sample,
                                   fresh_b.score_batch(sample,
@@ -773,6 +916,10 @@ def main() -> None:
     ap.add_argument("--alloc-only", action="store_true",
                     help="re-measure only the allocator-replay comparison "
                          "and splice it into the existing output JSON")
+    ap.add_argument("--pipeline-only", action="store_true",
+                    help="re-measure only the fused-pipeline slice and "
+                         "its smoke floor and splice them into the "
+                         "existing output JSON")
     ap.add_argument("--prune-only", action="store_true",
                     help="re-measure only the branch-and-bound pruning "
                          "benchmark (full yolov2 space, pruned vs unpruned "
@@ -816,6 +963,20 @@ def main() -> None:
         print(f"updated alloc_replay in {args.output}")
         return
 
+    if args.pipeline_only:
+        payload = json.loads(Path(args.output).read_text())
+        payload["pipeline_slice"] = bench_pipeline_slice("yolov2", 416)
+        gate = smoke_pipeline_gate(None)              # measure, no gate
+        payload["pipeline_floor"] = {
+            "network": gate["network"],
+            "pipeline_evals_per_sec": gate["pipeline_evals_per_sec"],
+            "busyloop_ops_per_sec": gate["busyloop_ops_per_sec"],
+            "max_regression": 0.30,
+        }
+        Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"updated pipeline_slice + pipeline_floor in {args.output}")
+        return
+
     if args.prune_only:
         if "fork" not in _mp.get_all_start_methods():
             print("prune bench requires the fork start method (the healed "
@@ -847,21 +1008,32 @@ def main() -> None:
         smoke_parallel_gate()
         verify_gate = smoke_verify_gate()
         prune_gate = smoke_prune_gate()
+        pipeline_gate = smoke_pipeline_gate(committed)
         smoke_out = Path("BENCH_smoke.json")
         smoke_out.write_text(json.dumps(
             {"networks": results, "batched_gate": gate,
-             "verify_gate": verify_gate, "prune_gate": prune_gate},
+             "verify_gate": verify_gate, "prune_gate": prune_gate,
+             "pipeline_gate": pipeline_gate},
             indent=2) + "\n")
         print(f"wrote {smoke_out} (CI artifact; committed JSON untouched)")
         # raised only now, after the diagnostic artifacts are on disk
         assert gate.get("passed", True), gate["fail_msg"]
         assert verify_gate["passed"], verify_gate["fail_msg"]
         assert prune_gate["passed"], prune_gate["fail_msg"]
+        assert pipeline_gate.get("passed", True), pipeline_gate["fail_msg"]
         return
 
     sweep = bench_workers_sweep("yolov2", 416, worker_counts=[1, 2, 4, 8])
     batched_slice = bench_batched_slice("yolov2", 416)
     alloc_replay = bench_alloc_replay("yolov2", 416)
+    pipeline_slice = bench_pipeline_slice("yolov2", 416)
+    pipe_gate = smoke_pipeline_gate(None)              # measure the floor
+    pipeline_floor = {
+        "network": pipe_gate["network"],
+        "pipeline_evals_per_sec": pipe_gate["pipeline_evals_per_sec"],
+        "busyloop_ops_per_sec": pipe_gate["busyloop_ops_per_sec"],
+        "max_regression": 0.30,
+    }
     prune = bench_prune("yolov2", 416) \
         if "fork" in _mp.get_all_start_methods() else None
 
@@ -891,8 +1063,10 @@ def main() -> None:
         "networks": results,
         "batched_slice": batched_slice,
         "alloc_replay": alloc_replay,
+        "pipeline_slice": pipeline_slice,
         "prune": prune,
         "smoke_floor": smoke_floor,
+        "pipeline_floor": pipeline_floor,
         "workers_sweep": sweep,
     }
     Path(args.output).write_text(json.dumps(payload, indent=2) + "\n")

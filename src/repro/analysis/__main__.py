@@ -52,9 +52,9 @@ def main(argv: list[str] | None = None) -> int:
                          "every applicable mutant is killed")
     ap.add_argument("--seeds", type=int, default=3,
                     help="seeds per mutation class (default 3)")
-    ap.add_argument("--replay", choices=("journal", "device"),
-                    default="journal",
-                    help="allocator replay path for the compile search")
+    ap.add_argument("--engine", default="journal",
+                    help="execution engine for the compile search "
+                         "(e.g. journal, device, device:pallas, pipeline)")
     ap.add_argument("--exhaustive-limit", type=int, default=DEFAULT_LIMIT,
                     help=f"cut-search exhaustive bound "
                          f"(default {DEFAULT_LIMIT})")
@@ -78,7 +78,7 @@ def main(argv: list[str] | None = None) -> int:
             build_cnn(name, sizes[name]),
             options=CompileOptions(
                 exhaustive_limit=args.exhaustive_limit,
-                replay=args.replay))
+                engine=args.engine))
         plans[name] = plan
         diags = verify_execution_plan(plan)
         total_errors += sum(d.severity is Severity.ERROR for d in diags)

@@ -126,7 +126,7 @@ def compile_graph(graph: Graph, hw: FPGAConfig = KCU1500,
     All search/scheduling knobs arrive as one
     :class:`repro.core.options.CompileOptions` -- that class's docstring
     is the single knob reference (objective, exhaustive_limit, workers,
-    batch_size, replay, backend, max_retries, task_deadline_s,
+    batch_size, engine, backend, max_retries, task_deadline_s,
     resume_dir, prune, count_pruned, verify).  The legacy loose-keyword
     spelling (``compile_graph(g, hw, workers=8)``) still works through
     the deprecation shim and emits

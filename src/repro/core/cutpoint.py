@@ -54,18 +54,28 @@ bit-for-bit on every metric and is built from three pieces:
   knob (results and ``evaluated`` counts are identical for every batch
   size), and ``kernels/score_batch.py`` stages the same B x G reduction
   as a Pallas TPU kernel behind ``backend="pallas"``.
-* **Device allocator replay** -- behind ``replay="device"``,
-  ``score_batch`` skips the Python replay altogether: the frame-mask
-  matrix is computed directly from the cut tuples (three gathers) and
-  the whole batch runs through the *tensorized allocator state machine*
-  of ``kernels/alloc_scan.py`` -- ``alloc_step`` re-expressed as a
+* **Device allocator replay** -- behind ``engine="device"`` (with
+  ``:reference`` / ``:scan`` / ``:pallas`` variants), ``score_batch``
+  skips the Python replay altogether: the frame-mask matrix is computed
+  directly from the cut tuples (three gathers) and the whole batch runs
+  through the *tensorized allocator state machine* of
+  ``kernels/alloc_scan.py`` -- ``alloc_step`` re-expressed as a
   data-independent update rule over fixed-width integer arrays, scanned
   once over groups for all B candidates (numpy reference /
-  ``jax.lax.scan`` / Pallas kernel via ``alloc_backend``, all
-  integer-exact).  The journal path stays the default and the two are
-  bit-identical, including memo contents and ``evaluations``
-  (tests/test_alloc_scan.py), which is what makes the whole search loop
-  end-to-end array-programmable instead of Python-orchestrated.
+  ``jax.lax.scan`` / Pallas kernel, all integer-exact).  The journal
+  path stays the default and the two are bit-identical, including memo
+  contents and ``evaluations`` (tests/test_alloc_scan.py), which is
+  what makes the whole search loop end-to-end array-programmable
+  instead of Python-orchestrated.
+* **Fused device search pipeline** -- behind ``engine="pipeline"``,
+  exhaustive sub-spaces never materialize their candidate tuples on the
+  host at all: ``kernels/search_pipeline.py`` enumerates cut tuples
+  in-kernel from the product-order run tables, replays the allocator via
+  ``alloc_scan``, reduces the exact costs, and runs a hierarchical
+  argmin so only the winning ``(key, cuts, evaluated)`` tuple comes
+  back.  Dispatch happens through ``CutpointEngine.run_subspace`` -- the
+  resolution point of the ``ReplayEngine`` protocol in
+  ``core/options.py``.
 
 Oracle contract: ``CutpointEngine.evaluate(cuts)`` returns the same
 ``latency_cycles`` / ``dram_total`` / ``dram_fm`` / ``sram_total`` /
@@ -100,7 +110,7 @@ from repro.core.hw import FPGAConfig
 # CompileOptions defaults; re-exported here for long-standing import sites.
 from repro.core.options import (DEFAULT_BATCH_SIZE,  # noqa: F401
                                 EXHAUSTIVE_LIMIT, CompileOptions,
-                                resolve_options)
+                                resolve_engine, resolve_options)
 from repro.core.sram import (sram_report, sram_tables, sram_total_fast,
                              sram_total_fast_batch)
 from repro.core.timing import (latency_cycles_fast, latency_cycles_fast_batch,
@@ -224,6 +234,12 @@ class SearchResult:
     # count and scheduling (later tasks inherit a better incumbent), so
     # like ``events`` it is excluded from the bit-identity contract.
     pruned: int = 0
+    # Which search path produced the result: "exhaustive" (full
+    # enumeration of the cut product, the guaranteed optimum) or
+    # "descent" (coordinate descent beyond ``exhaustive_limit``).  The
+    # compile service records it with each cached plan so warm-start
+    # eligibility can be decided per record (service/daemon.py).
+    path: str = "exhaustive"
 
 
 def evaluate(gg: GroupedGraph, blocks: list[Block], runs: list[list[int]],
@@ -281,12 +297,32 @@ class CutpointEngine:
                  blocks: list[Block] | None = None,
                  runs: list[list[int]] | None = None,
                  backend: str = "numpy", replay: str = "journal",
-                 alloc_backend: str | None = None):
+                 alloc_backend: str | None = None,
+                 engine: str | None = None):
         self.gg = gg
         self.hw = hw
         # "numpy" (oracle-exact, default) or "pallas" (the staged on-device
         # batch reduction, float32 -- see kernels/score_batch.py)
         self.backend = backend
+        # ``engine`` (an options.resolve_engine spelling) is the unified
+        # execution knob; when given it resolves onto the two internal
+        # knobs below (replay mode + alloc_scan implementation) and, for
+        # the "pipeline" engine, selects the fused sub-space pipeline in
+        # run_subspace.  The loose replay=/alloc_backend= parameters stay
+        # for internal callers and tests; engine= wins when both appear.
+        self._pipeline: str | None = None
+        if engine is not None:
+            spec = resolve_engine(engine)
+            if spec.name == "device":
+                replay, alloc_backend = "device", spec.variant
+            elif spec.name == "pipeline":
+                # score_batch falls back to the journal replay (the
+                # descent path is host-driven either way); run_subspace
+                # routes exhaustive sub-spaces through the fused kernel
+                replay = "journal"
+                self._pipeline = spec.variant
+            else:
+                replay = "journal"
         # "journal" (per-candidate checkpointed Python replay, default) or
         # "device" (tensorized allocator scan over the whole batch, see
         # kernels/alloc_scan.py) -- the default replay mode of score_batch
@@ -915,6 +951,42 @@ class CutpointEngine:
             out[i] = scored[j]
         return out
 
+    # ------------------------------------------------- engine dispatch
+    def run_subspace(self, prefix, suffix_dims, objective: str,
+                     batch_size: int = DEFAULT_BATCH_SIZE,
+                     incumbent_key=None, prune: bool = True):
+        """Argmin over one sub-space, under this engine's execution mode.
+
+        The single resolution point of the ``options.ReplayEngine``
+        protocol: the serial ``search`` loop, every pool worker
+        (``search_pool._run_subspace``) and therefore the compile
+        service all route exhaustive sub-spaces through here.  Returns
+        ``(best, pruned)`` exactly like :func:`branch_bound_subspace`.
+
+        * journal / device engines -> the host-driven branch-and-bound
+          walk (``branch_bound_subspace``), scoring through
+          ``score_batch`` under the engine's replay mode;
+        * the pipeline engine -> ``kernels/search_pipeline.py``'s fused
+          enumerate + alloc-scan + reduce + argmin device loop, which
+          scores the *whole* sub-space (no pruning -- every candidate is
+          priced in-kernel, so ``pruned`` comes back 0 and ``evaluated``
+          equals the full enumeration count, i.e. the journal path's
+          count under the default ``count_pruned=True`` accounting).
+
+        Both paths return the bit-identical ``(key, cuts)``-lexicographic
+        winner (tests/test_search_pipeline.py).
+        """
+        if self._pipeline is not None:
+            from repro.kernels.search_pipeline import pipeline_subspace
+            return pipeline_subspace(self, tuple(prefix),
+                                     list(suffix_dims), objective,
+                                     batch_size=batch_size,
+                                     variant=self._pipeline)
+        return branch_bound_subspace(self, prefix, suffix_dims, objective,
+                                     batch_size=batch_size,
+                                     incumbent_key=incumbent_key,
+                                     prune=prune)
+
 
 # ------------------------------------------------------------------ search
 # Largest cut-product space searched exhaustively; larger spaces fall back
@@ -1193,11 +1265,12 @@ PreemptionGuard` the pool polls for clean SIGTERM drain) and
         space *= len(r) + 1
 
     engine = CutpointEngine(gg, hw, blocks, runs, backend=opts.backend,
-                            replay=opts.replay)
-    objective, batch_size = opts.objective, opts.batch_size
+                            engine=opts.engine)
+    spec = opts.engine_spec()
+    objective, batch_size = opts.objective, spec.batch_size
 
-    def materialize(best: CandidateMetrics,
-                    pruned: int = 0) -> SearchResult:
+    def materialize(best: CandidateMetrics, pruned: int = 0,
+                    path: str = "exhaustive") -> SearchResult:
         # Re-run the winner through the direct oracle so the returned
         # Candidate (policy, alloc, metrics) is exactly what the direct
         # search would have produced.
@@ -1206,7 +1279,8 @@ PreemptionGuard` the pool polls for clean SIGTERM drain) and
         if opts.count_pruned:
             evaluated += pruned
         return SearchResult(best=cand, evaluated=evaluated,
-                            runs=runs, blocks=blocks, pruned=pruned)
+                            runs=runs, blocks=blocks, pruned=pruned,
+                            path=path)
 
     ws = valid_warm_start(warm_start, runs)
     if space <= opts.exhaustive_limit:
@@ -1230,9 +1304,11 @@ PreemptionGuard` the pool polls for clean SIGTERM drain) and
         # product order: the last run varies fastest, so consecutive tuples
         # share the longest possible checkpoint prefix; with prune=True
         # whole sub-spaces fall to the incumbent bound instead of being
-        # walked at all
-        best, pruned = branch_bound_subspace(
-            engine, (), [len(r) for r in runs], objective,
+        # walked at all.  The pipeline engine instead fuses the whole loop
+        # on device (sharded over accelerators when more than one is
+        # visible) -- see run_subspace / kernels/search_pipeline.py.
+        best, pruned = engine.run_subspace(
+            (), [len(r) for r in runs], objective,
             batch_size=batch_size, incumbent_key=incumbent,
             prune=opts.prune)
         # never all-pruned: any external incumbent is a candidate *inside*
@@ -1257,7 +1333,7 @@ PreemptionGuard` the pool polls for clean SIGTERM drain) and
         if best is None or _key(cur, objective) < _key(best, objective):
             best = cur
     assert best is not None
-    return materialize(best)
+    return materialize(best, path="descent")
 
 
 def sweep_single_cut(gg: GroupedGraph, hw: FPGAConfig) -> list[Candidate]:

@@ -65,11 +65,31 @@ Scheduling-only (wall clock / resilience / post-checks; excluded from
     (``core/search_pool.py``); ``None`` uses ``os.cpu_count()``.
 ``batch_size``
     Cut tuples priced per ``CutpointEngine.score_batch`` call
-    (``1`` falls back to the per-tuple loop).
-``replay``
-    Allocator replay of the batched scorer: ``"journal"``
-    (checkpointed Python replay, default) or ``"device"`` (tensorized
-    allocator scan, kernels/alloc_scan.py).  Integer-exact either way.
+    (``1`` falls back to the per-tuple loop).  An ``@N`` suffix on
+    ``engine`` overrides it.
+``engine``
+    How candidate metrics are *executed* (never *what* they are --
+    every engine value is bit-identical, which is exactly why the knob
+    is scheduling-only).  Grammar: ``name[:variant][@batch]``:
+
+    * ``"journal"`` (default) -- checkpointed Python allocator replay
+      per candidate (``CutpointEngine._replay``).
+    * ``"device"`` -- tensorized allocator scan over the whole batch
+      (``kernels/alloc_scan.py``); variants select the scan
+      implementation: ``"device"`` == ``"device:reference"`` (numpy),
+      ``"device:scan"`` (``jax.lax.scan``), ``"device:pallas"``.
+    * ``"pipeline"`` -- the fully fused on-device search pipeline
+      (``kernels/search_pipeline.py``): in-kernel candidate
+      enumeration + alloc-scan replay + cost reductions + hierarchical
+      argmin; the host receives only each sub-space's winner.
+      Variants: ``"pipeline"`` (auto: lax when jax is available, else
+      the numpy reference), ``"pipeline:reference"``,
+      ``"pipeline:lax"``, ``"pipeline:pallas"``.
+
+    ``@N`` appended to any spelling overrides ``batch_size`` for that
+    engine (``"pipeline@4096"``).  The float32 Pallas *scoring* kernel
+    is NOT an engine value: it changes plan bytes, so it stays on the
+    plan-affecting ``backend`` field.
 ``max_retries``
     Re-dispatch budget per parallel task for *transient* failures (a
     dead worker process, an injected ChaosError, a straggler
@@ -110,23 +130,145 @@ EXHAUSTIVE_LIMIT = 8_000_000
 DEFAULT_BATCH_SIZE = 1024
 
 _OBJECTIVES = ("latency", "sram", "dram")
-_REPLAYS = ("journal", "device")
 _BACKENDS = ("numpy", "pallas")
 _VERIFY_MODES = ("off", "warn", "strict")
+
+# engine= grammar: name[:variant][@batch].  Variant "" means the engine's
+# default implementation; every (name, variant) pair below is bit-identical
+# to every other, which is what keeps ``engine`` scheduling-only.
+_ENGINE_VARIANTS = {
+    "journal": ("",),
+    "device": ("", "reference", "scan", "pallas"),
+    "pipeline": ("", "reference", "lax", "pallas"),
+}
 
 # The plan-affecting / scheduling-only split (see module docstring).
 PLAN_FIELDS = ("objective", "exhaustive_limit", "backend", "prune",
                "count_pruned")
-SCHEDULE_FIELDS = ("workers", "batch_size", "replay", "max_retries",
+SCHEDULE_FIELDS = ("workers", "batch_size", "engine", "max_retries",
                    "task_deadline_s", "resume_dir", "verify")
 
 
 class LegacyKnobWarning(DeprecationWarning):
     """A compile entry point was called with loose legacy keyword knobs
-    (``workers=``, ``batch_size=``, ...) instead of
+    (``workers=``, ``batch_size=``, ``replay=``, ...) instead of
     ``options=CompileOptions(...)``.  The shim maps them onto the
     dataclass so behaviour is unchanged; tier-1 CI promotes this warning
     to an error so no internal caller regresses to the old spelling."""
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """A parsed ``engine=`` value (see the module docstring's grammar).
+
+    ``variant`` is the resolved implementation name, never ``""``:
+    ``resolve_engine`` substitutes each engine's default.  ``batch_size``
+    is the effective batch (an ``@N`` suffix wins over the caller's
+    default)."""
+    name: str                  # "journal" / "device" / "pipeline"
+    variant: str               # resolved implementation, e.g. "reference"
+    batch_size: int | None     # from "@N", else the caller's default
+
+    def spelling(self) -> str:
+        """The canonical string this spec round-trips to."""
+        s = f"{self.name}:{self.variant}" if self.name != "journal" \
+            else self.name
+        if self.batch_size is not None:
+            s += f"@{self.batch_size}"
+        return s
+
+
+def _default_variant(name: str) -> str:
+    if name == "device":
+        return "reference"
+    if name == "pipeline":
+        # lax is the production default when jax is importable; the numpy
+        # reference otherwise.  Both are bit-identical, so auto-selection
+        # cannot change results -- only wall clock.
+        try:
+            import jax                                   # noqa: F401
+            return "lax"
+        except Exception:                    # pragma: no cover - jax baked
+            return "reference"
+    return ""
+
+
+def resolve_engine(engine: str,
+                   default_batch: int | None = None) -> EngineSpec:
+    """Parse and validate an ``engine=`` string into an :class:`EngineSpec`.
+
+    Raises ``ValueError`` on an unknown name, an unknown variant for the
+    name, or a malformed ``@batch`` suffix.  ``default_batch`` fills
+    ``batch_size`` when no ``@N`` suffix is present.
+    """
+    if not isinstance(engine, str):
+        raise ValueError(f"engine={engine!r}: expected a string "
+                         f"'name[:variant][@batch]'")
+    spec, batch = engine, default_batch
+    if "@" in spec:
+        spec, _, bs = spec.partition("@")
+        if not bs.isdigit() or int(bs) < 1:
+            raise ValueError(f"engine={engine!r}: '@{bs}' batch suffix "
+                             f"must be a positive integer")
+        batch = int(bs)
+    name, _, variant = spec.partition(":")
+    variants = _ENGINE_VARIANTS.get(name)
+    if variants is None:
+        raise ValueError(f"engine={engine!r}: expected one of "
+                         f"{tuple(sorted(_ENGINE_VARIANTS))} "
+                         f"(grammar: name[:variant][@batch])")
+    if variant not in variants:
+        raise ValueError(f"engine={engine!r}: unknown variant "
+                         f"{variant!r} for {name!r}; expected one of "
+                         f"{tuple(v for v in variants if v)}")
+    if not variant:
+        variant = _default_variant(name)
+    return EngineSpec(name=name, variant=variant, batch_size=batch)
+
+
+def degrade_engine(engine: str) -> str:
+    """The safe fallback spelling for ``engine``: the journal replay,
+    preserving any explicit ``@batch`` suffix.
+
+    This is the single degrade target the parallel runtime routes
+    through -- a failing device or pipeline task, and every speculative
+    straggler duplicate, re-runs under the returned engine (bit-identical
+    by the replay contract, so degradation only costs wall clock)."""
+    spec = resolve_engine(engine)
+    if spec.batch_size is not None:
+        return f"journal@{spec.batch_size}"
+    return "journal"
+
+
+try:
+    from typing import Protocol, runtime_checkable
+except ImportError:                          # pragma: no cover - py>=3.10
+    Protocol = object
+
+    def runtime_checkable(cls):
+        return cls
+
+
+@runtime_checkable
+class ReplayEngine(Protocol):
+    """What the search runtime requires of a candidate-scoring engine.
+
+    ``CutpointEngine`` is the one production implementation;
+    ``ParallelSearchDriver``'s workers, the serial ``search`` loop and
+    the compile service all resolve their ``CompileOptions.engine``
+    string into a concrete implementation through this surface (see
+    ``CutpointEngine.run_subspace`` for the dispatch).  Every
+    implementation must be bit-identical on ``run_subspace``'s winner --
+    the contract that keeps ``engine`` scheduling-only."""
+
+    evaluations: int
+
+    def score_batch(self, cuts_batch, memoize: bool = True,
+                    skip=None) -> list: ...
+
+    def run_subspace(self, prefix, suffix_dims, objective: str,
+                     batch_size: int, incumbent_key=None,
+                     prune: bool = True) -> tuple: ...
 
 
 @dataclass(frozen=True)
@@ -142,7 +284,7 @@ class CompileOptions:
     exhaustive_limit: int = EXHAUSTIVE_LIMIT
     workers: int | None = 1
     batch_size: int = DEFAULT_BATCH_SIZE
-    replay: str = "journal"
+    engine: str = "journal"
     backend: str = "numpy"
     max_retries: int = 2
     task_deadline_s: float | None = None
@@ -155,9 +297,7 @@ class CompileOptions:
         if self.objective not in _OBJECTIVES:
             raise ValueError(f"objective={self.objective!r}: expected one "
                              f"of {_OBJECTIVES}")
-        if self.replay not in _REPLAYS:
-            raise ValueError(f"replay={self.replay!r}: expected one of "
-                             f"{_REPLAYS}")
+        resolve_engine(self.engine)       # validates the grammar; raises
         if self.backend not in _BACKENDS:
             raise ValueError(f"backend={self.backend!r}: expected one of "
                              f"{_BACKENDS}")
@@ -183,6 +323,12 @@ class CompileOptions:
     def replace(self, **changes) -> "CompileOptions":
         """A copy with ``changes`` applied (re-validated)."""
         return dataclasses.replace(self, **changes)
+
+    def engine_spec(self) -> EngineSpec:
+        """The parsed :class:`EngineSpec` of this option set; its
+        ``batch_size`` is the effective one (an ``@N`` engine suffix
+        overrides the ``batch_size`` field)."""
+        return resolve_engine(self.engine, self.batch_size)
 
     def plan_key(self) -> tuple:
         """Canonical tuple of the plan-affecting fields.
@@ -212,6 +358,11 @@ class CompileOptions:
 
 _FIELD_NAMES = tuple(f.name for f in dataclasses.fields(CompileOptions))
 
+# Retired keyword spellings the legacy shim still understands.  ``replay``
+# predates the unified ``engine`` knob; its two values map 1:1 onto engine
+# spellings ("journal" -> "journal", "device" -> "device").
+_RETIRED_KNOBS = ("replay",)
+
 
 def resolve_options(options: CompileOptions | None,
                     legacy: dict | None,
@@ -223,15 +374,22 @@ def resolve_options(options: CompileOptions | None,
     * ``options`` given -> returned as-is (legacy knobs must be absent);
     * legacy knobs given -> mapped onto a fresh ``CompileOptions`` with a
       :class:`LegacyKnobWarning` (promoted to an error in tier-1 CI).
+      The retired ``replay=`` spelling is translated onto ``engine=``
+      (``"journal"``/``"device"``, unchanged meaning).
 
     Unknown legacy names raise ``TypeError`` exactly as a wrong keyword
     argument would have before the redesign.
     """
-    legacy = legacy or {}
-    unknown = sorted(set(legacy) - set(_FIELD_NAMES))
+    legacy = dict(legacy) if legacy else {}
+    unknown = sorted(set(legacy) - set(_FIELD_NAMES) - set(_RETIRED_KNOBS))
     if unknown:
         raise TypeError(f"{site}() got unexpected keyword argument(s) "
                         f"{', '.join(map(repr, unknown))}")
+    if "replay" in legacy:
+        if "engine" in legacy:
+            raise TypeError(f"{site}(): pass engine=..., not both the "
+                            f"retired replay= spelling and engine=")
+        legacy["engine"] = legacy.pop("replay")
     if options is not None:
         if not isinstance(options, CompileOptions):
             raise TypeError(f"{site}(): options must be a CompileOptions, "

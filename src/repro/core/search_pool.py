@@ -72,12 +72,14 @@ failure classes:
   running past its deadline (tightened by a task-grain EWMA once enough
   tasks have completed -- ``StragglerMonitor.straggler_after``) gets one
   speculative duplicate re-dispatched; first completion wins, and the
-  duplicate always runs the ``"journal"`` replay so a hanging device
-  backend cannot hang its own rescue.
-* **Device-replay degradation** -- a worker whose ``replay="device"``
-  scoring raises falls back to the journal replay *inside the task* and
-  reports a ``device_fallback`` event; results are bit-identical by the
-  replay contract, so degradation is logged, never silent.
+  duplicate is degraded through
+  :func:`repro.core.options.degrade_engine` to the ``"journal"`` engine
+  so a hanging device backend cannot hang its own rescue.
+* **Device-engine degradation** -- a worker whose ``engine="device"``
+  (or ``"pipeline"``) scoring raises falls back to the journal engine
+  *inside the task* and reports a ``device_fallback`` event; results are
+  bit-identical by the engine contract, so degradation is logged, never
+  silent.
 
 Every recovery is surfaced as a :class:`FaultEvent` on
 ``SearchResult.events`` (retry / straggler / device_fallback / resume) --
@@ -106,13 +108,16 @@ import itertools
 import multiprocessing as mp
 import os
 import pickle
+import sys
 import time
+import warnings
 from collections import deque
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from concurrent.futures.process import BrokenProcessPool
 from dataclasses import dataclass
 
 from repro.core import cutpoint as _cp
+from repro.core.options import degrade_engine, resolve_engine
 from repro.runtime import chaos as _chaos
 from repro.runtime.fault_tolerance import PreemptionGuard, StragglerMonitor
 
@@ -152,13 +157,13 @@ class FaultEvent:
 
 
 # ---------------------------------------------------------- worker globals
-# Engines per worker process, keyed by (search token, replay mode, scoring
-# backend) -- rebuilt when the token changes (a fresh token per driver
-# search keeps each engine's memo in the exact state the serial
+# Engines per worker process, keyed by (search token, engine spelling,
+# scoring backend) -- rebuilt when the token changes (a fresh token per
+# driver search keeps each engine's memo in the exact state the serial
 # implementation's fresh engine has, which is what makes `evaluated` -- a
-# cache-miss count -- reproducible).  The replay key exists because a
-# device-replay task that degrades mid-search needs a *separate*
-# journal-replay engine.
+# cache-miss count -- reproducible).  The engine key exists because a
+# device/pipeline task that degrades mid-search needs a *separate*
+# journal-engine instance.
 _ENGINES: dict = {}
 
 # Legacy test hook (predates runtime/chaos.py): set to "raise" / "exit" in
@@ -168,9 +173,9 @@ _TEST_FAIL_HOOK: str | None = None
 
 
 def _worker_engine(token: tuple, payload: bytes,
-                   replay: str = "journal",
+                   engine_spec: str = "journal",
                    backend: str = "numpy") -> "_cp.CutpointEngine":
-    key = (token, replay, backend)
+    key = (token, engine_spec, backend)
     engine = _ENGINES.get(key)
     if engine is None:
         # a new search token invalidates engines of previous searches
@@ -178,8 +183,35 @@ def _worker_engine(token: tuple, payload: bytes,
             del _ENGINES[old]
         gg, hw = pickle.loads(payload)
         engine = _ENGINES[key] = _cp.CutpointEngine(gg, hw, backend=backend,
-                                                    replay=replay)
+                                                    engine=engine_spec)
     return engine
+
+
+def _engine_needs_jax(spec) -> bool:
+    """Whether worker processes will execute jax for this engine spec.
+
+    Exactly the variants whose scoring path jits: the journal engine and
+    the numpy reference variants never import jax in the worker."""
+    return ((spec.name == "pipeline" and spec.variant in ("lax", "pallas"))
+            or (spec.name == "device" and spec.variant in ("scan", "pallas")))
+
+
+def _spawn_main_viable() -> bool:
+    """Whether spawn-started workers can initialize.
+
+    ``multiprocessing``'s spawn path re-imports the parent's ``__main__``
+    in the child (unless the parent is ``python -c``/embedded, where it
+    skips the step).  A parent fed from stdin records ``<stdin>`` as its
+    main path, which the child then fails to open -- every worker dies at
+    startup.  Detect that corner so the caller can degrade gracefully."""
+    main = sys.modules.get("__main__")
+    if main is None or getattr(getattr(main, "__spec__", None),
+                               "name", None):
+        return True                      # python -m style: import by name
+    if sys.argv[0] in ("", "-c"):
+        return True                      # spawn skips main re-import
+    path = getattr(main, "__file__", None)
+    return path is None or os.path.exists(path)
 
 
 def _maybe_fail(key, attempt: int = 0) -> None:
@@ -206,39 +238,42 @@ def _run_subspace(task, attempt: int = 0):
     replay; the argmin is ``None`` only when the *entire* task falls to
     the incumbent, which is safe because the global optimum's own task
     can never prune it (its bound never exceeds any incumbent).  A
-    failing device replay degrades to the journal replay in-task
-    (bit-identical by contract) and reports a ``device_fallback`` event
-    instead of failing the task.
+    failing device/pipeline engine degrades to the journal engine
+    in-task (bit-identical by contract) and reports a
+    ``device_fallback`` event instead of failing the task.
     """
-    (token, payload, prefix, suffix_dims, objective, batch_size, replay,
+    (token, payload, prefix, suffix_dims, objective, batch_size, engine_spec,
      backend) = task[:8]
     prune = task[8] if len(task) > 8 else False
     incumbent = task[9] if len(task) > 9 else None
     _maybe_fail(prefix, attempt)
+    engine_name = resolve_engine(engine_spec).name
 
     def score(engine):
         before = engine.evaluations
-        best, pruned = _cp.branch_bound_subspace(
-            engine, prefix, list(suffix_dims), objective,
+        best, pruned = engine.run_subspace(
+            prefix, list(suffix_dims), objective,
             batch_size=batch_size, incumbent_key=incumbent, prune=prune)
         return best, engine.evaluations - before, pruned
 
     events: tuple = ()
     try:
-        engine = _worker_engine(token, payload, replay, backend)
-        if replay == "device":
+        engine = _worker_engine(token, payload, engine_spec, backend)
+        if engine_name != "journal":
             # chaos site for injected backend failures (tests/benchmarks)
             _chaos.maybe_fire("device", prefix, attempt)
         best, n, pruned = score(engine)
     except Exception as e:
-        if replay != "device":
+        if engine_name == "journal":
             raise
-        # device backend raised: degrade to the journal replay -- logged,
-        # never silent, and bit-identical by the replay contract
-        engine = _worker_engine(token, payload, "journal", backend)
+        # device/pipeline engine raised: degrade to the journal engine --
+        # logged, never silent, and bit-identical by the engine contract
+        engine = _worker_engine(token, payload, degrade_engine(engine_spec),
+                                backend)
         best, n, pruned = score(engine)
-        events = (("device_fallback", f"device replay failed ({e!r}); "
-                   f"journal replay substituted"),)
+        events = (("device_fallback",
+                   f"{engine_name} engine failed ({e!r}); "
+                   f"journal engine substituted"),)
     return best, n, pruned, events
 
 
@@ -248,11 +283,12 @@ def _run_descent(task, attempt: int = 0):
     Returns ``(final CandidateMetrics, visited frozenset, worker
     events)``.  Runs ``cutpoint.coordinate_descent`` itself -- the one
     definition of the descent trajectory -- so the returned point is the
-    one the serial loop reaches from this start, by construction.  Device
-    replay degradation mirrors ``_run_subspace``.
+    one the serial loop reaches from this start, by construction.  Engine
+    degradation mirrors ``_run_subspace``.
     """
-    token, payload, start, objective, batch_size, replay, backend = task
+    token, payload, start, objective, batch_size, engine_spec, backend = task
     _maybe_fail(start, attempt)
+    engine_name = resolve_engine(engine_spec).name
 
     def run(engine):
         visited: set[tuple[int, ...]] = set()
@@ -263,29 +299,33 @@ def _run_descent(task, attempt: int = 0):
 
     events: tuple = ()
     try:
-        engine = _worker_engine(token, payload, replay, backend)
-        if replay == "device":
+        engine = _worker_engine(token, payload, engine_spec, backend)
+        if engine_name != "journal":
             _chaos.maybe_fire("device", start, attempt)
         cur, visited = run(engine)
     except Exception as e:
-        if replay != "device":
+        if engine_name == "journal":
             raise
-        engine = _worker_engine(token, payload, "journal", backend)
+        engine = _worker_engine(token, payload, degrade_engine(engine_spec),
+                                backend)
         cur, visited = run(engine)
-        events = (("device_fallback", f"device replay failed ({e!r}); "
-                   f"journal replay substituted"),)
+        events = (("device_fallback",
+                   f"{engine_name} engine failed ({e!r}); "
+                   f"journal engine substituted"),)
     return cur, visited, events
 
 
 def _degrade_subspace(task):
-    """Straggler duplicates always run the journal replay: if the device
-    backend is what's hanging, the rescue must not hang with it.  Backend
-    and prune fields ride along unchanged."""
-    return task[:6] + ("journal",) + task[7:]
+    """Straggler duplicates always degrade to the journal engine (via
+    :func:`repro.core.options.degrade_engine`, which preserves an explicit
+    ``@batch`` suffix): if the device or pipeline backend is what's
+    hanging, the rescue must not hang with it.  Backend and prune fields
+    ride along unchanged."""
+    return task[:6] + (degrade_engine(task[6]),) + task[7:]
 
 
 def _degrade_descent(task):
-    return task[:5] + ("journal",) + task[6:]
+    return task[:5] + (degrade_engine(task[5]),) + task[6:]
 
 
 # ----------------------------------------------------- journal record codec
@@ -359,7 +399,14 @@ class ParallelSearchDriver:
     mp_context:
         ``multiprocessing`` start method.  Default: ``"fork"`` where
         available (workers inherit the parent's imports, so startup is
-        milliseconds), else the platform default.
+        milliseconds), else the platform default.  When a search's
+        engine runs jax inside the workers (``pipeline:lax``,
+        ``pipeline:pallas``, ``device:scan``, ``device:pallas``) the
+        defaulted context is ratcheted to ``"spawn"`` before the pool is
+        (re)created -- forking a parent that has already run jit'd code
+        hands the children XLA's locked mutexes and deadlocks them (see
+        :meth:`_ensure_jax_safe_pool`).  Passing ``mp_context``
+        explicitly disables the ratchet.
     max_retries:
         Re-dispatch budget per task for *transient* failures (a dead
         worker process breaking the pool, an injected ``ChaosError``, a
@@ -392,6 +439,7 @@ class ParallelSearchDriver:
                  guard: "PreemptionGuard | None" = None,
                  straggler_threshold: float = 4.0):
         self.workers = max(1, workers or os.cpu_count() or 1)
+        self._explicit_ctx = mp_context is not None
         if mp_context is None and "fork" in mp.get_all_start_methods():
             mp_context = "fork"
         self._ctx = mp.get_context(mp_context) if mp_context else None
@@ -408,6 +456,45 @@ class ParallelSearchDriver:
             self._pool = ProcessPoolExecutor(max_workers=self.workers,
                                              mp_context=self._ctx)
         return self._pool
+
+    def _jax_safe_opts(self, opts):
+        """Make a search with jax-in-worker engines fork-safe.
+
+        XLA's runtime is multithreaded the moment the parent evaluates
+        anything under jit; fork-started children then inherit its locked
+        mutexes and deadlock on first device call.  Engines whose workers
+        stay in numpy (journal, device:reference, pipeline:reference) are
+        unaffected and keep fork's millisecond startup.  For jax-running
+        specs the defaulted fork context is ratcheted to spawn -- one-way
+        for the life of the driver, since spawn is safe for every engine
+        and flip-flopping would churn worker pools (and their per-process
+        engine caches) on mixed-engine drivers.  When spawn cannot
+        reconstruct the parent's ``__main__`` (a stdin-fed script), the
+        engine degrades to the journal replay instead -- bit-identical by
+        the replay contract, so it only costs wall clock -- with a loud
+        warning.  An explicit ``mp_context`` from the caller is always
+        honored, including its deadlock hazard.
+        """
+        if self._explicit_ctx or not _engine_needs_jax(opts.engine_spec()):
+            return opts
+        if self._ctx is not None and self._ctx.get_start_method() != "fork":
+            return opts
+        if "spawn" not in mp.get_all_start_methods():  # pragma: no cover
+            return opts
+        if not _spawn_main_viable():
+            warnings.warn(
+                f"engine={opts.engine!r} runs jax inside worker processes, "
+                f"which is unsafe under the fork start method once the "
+                f"parent has used jax -- and spawn cannot re-import this "
+                f"process's __main__ ({getattr(sys, 'argv', ['?'])[0]!r}). "
+                f"Falling back to the (bit-identical) journal engine for "
+                f"worker tasks; run from an importable script/module or "
+                f"pass mp_context explicitly to silence this.",
+                RuntimeWarning, stacklevel=3)
+            return opts.replace(engine=degrade_engine(opts.engine))
+        self._reset()
+        self._ctx = mp.get_context("spawn")
+        return opts
 
     def map(self, fn, items, chunksize: int = 1) -> list:
         """Ordered parallel map (the generic face of the pool).
@@ -449,7 +536,7 @@ class ParallelSearchDriver:
         """A TaskJournal keyed by the content hash of (graph+hw payload,
         ``CompileOptions.plan_key()``, partition) -- resuming is only
         legal when every one of those matches; scheduling-only knobs
-        (batch_size, replay, worker count at fixed partition) are
+        (batch_size, engine, worker count at fixed partition) are
         deliberately excluded, since results are bit-identical across
         them.  Keying on the full ``plan_key()`` (not just the objective,
         as the first version of this journal did) is what keeps e.g. a
@@ -702,15 +789,17 @@ class ParallelSearchDriver:
             starts.append(ws)       # extra deterministic start, appended
             #                         so ties still favor the cold starts
         self._searches += 1
-        token = (os.getpid(), id(self), self._searches, opts.replay)
+        token = (os.getpid(), id(self), self._searches, opts.engine)
         payload = pickle.dumps((gg, hw), protocol=pickle.HIGHEST_PROTOCOL)
         events: list[FaultEvent] = []
         journal = None
         if opts.resume_dir is not None:
             journal = self._open_journal(opts.resume_dir, payload, opts,
                                          "descent", tuple(starts))
-        tasks = [(token, payload, s, opts.objective, opts.batch_size,
-                  opts.replay, opts.backend) for s in starts]
+        batch_size = opts.engine_spec().batch_size
+        opts = self._jax_safe_opts(opts)
+        tasks = [(token, payload, s, opts.objective, batch_size,
+                  opts.engine, opts.backend) for s in starts]
         results = self._run_tasks(
             _run_descent, tasks, keys=starts, events=events,
             journal=journal, encode=_encode_descent,
@@ -726,7 +815,8 @@ class ParallelSearchDriver:
                 best = m                    # the serial loop over starts
         cand = _cp.evaluate(gg, blocks, runs, best.cuts, hw)
         return _cp.SearchResult(best=cand, evaluated=len(visited),
-                                runs=runs, blocks=blocks, events=events)
+                                runs=runs, blocks=blocks, events=events,
+                                path="descent")
 
     def run_subspaces(self, gg, hw, prefixes, suffix_dims, options=None,
                       *, blocks=None, runs=None, warm_start=None,
@@ -748,15 +838,16 @@ class ParallelSearchDriver:
         under ``count_pruned`` the ``evaluated`` accounting is identical
         to a cold run.
         """
-        opts = _cp.resolve_options(options, legacy,
-                                   site="driver.run_subspaces")
+        opts = self._jax_safe_opts(
+            _cp.resolve_options(options, legacy,
+                                site="driver.run_subspaces"))
         objective = opts.objective
         if blocks is None:
             blocks = _cp.split_blocks(gg)
         if runs is None:
             runs = _cp.monotone_runs(blocks)
         self._searches += 1
-        token = (os.getpid(), id(self), self._searches, opts.replay)
+        token = (os.getpid(), id(self), self._searches, opts.engine)
         payload = pickle.dumps((gg, hw), protocol=pickle.HIGHEST_PROTOCOL)
         events: list[FaultEvent] = []
         journal = None
@@ -764,8 +855,9 @@ class ParallelSearchDriver:
             journal = self._open_journal(
                 opts.resume_dir, payload, opts, "exhaustive",
                 (tuple(suffix_dims), tuple(prefixes)))
+        batch_size = opts.engine_spec().batch_size
         tasks = [(token, payload, p, tuple(suffix_dims), objective,
-                  opts.batch_size, opts.replay, opts.backend, opts.prune,
+                  batch_size, opts.engine, opts.backend, opts.prune,
                   None) for p in prefixes]
         # Incumbent propagation: every completed (or journal-resumed) task
         # result tightens a shared best-so-far key; tasks submitted after
@@ -822,4 +914,4 @@ class ParallelSearchDriver:
         cand = _cp.evaluate(gg, blocks, runs, best.cuts, hw)
         return _cp.SearchResult(best=cand, evaluated=evaluated,
                                 runs=runs, blocks=blocks, events=events,
-                                pruned=pruned_total)
+                                pruned=pruned_total, path="exhaustive")

@@ -3,13 +3,19 @@
 # kernel. Leave this package empty if the paper has none.
 #
 # Resident kernels for this reproduction's search loop:
-#   score_batch.py -- B x G mask-matrix candidate pricing (float32 Pallas
-#                     staging of the batched cost-model reductions,
-#                     CutpointEngine backend="pallas")
-#   alloc_scan.py  -- tensorized allocator replay: Algorithm 1's
-#                     sequential state machine as a scan over groups
-#                     (numpy reference / jax.lax.scan / Pallas, all
-#                     integer-exact; CutpointEngine replay="device")
-# Both fall back to interpret mode off-TPU and are validated against
+#   score_batch.py     -- B x G mask-matrix candidate pricing (float32
+#                         Pallas staging of the batched cost-model
+#                         reductions, CutpointEngine backend="pallas")
+#   alloc_scan.py      -- tensorized allocator replay: Algorithm 1's
+#                         sequential state machine as a scan over groups
+#                         (numpy reference / jax.lax.scan / Pallas, all
+#                         integer-exact; CompileOptions engine="device")
+#   search_pipeline.py -- fully fused sub-space search: in-kernel
+#                         candidate enumeration -> alloc_scan replay ->
+#                         exact cost reductions -> hierarchical argmin,
+#                         so only the winning tuple reaches the host
+#                         (CompileOptions engine="pipeline")
+# All fall back to interpret mode off-TPU and are validated against
 # their numpy references (tests/test_score_batch.py,
-# tests/test_alloc_scan.py) in the kernels-interpret CI job.
+# tests/test_alloc_scan.py, tests/test_search_pipeline.py) in the
+# kernels-interpret CI job.

@@ -31,7 +31,7 @@ The per-group update rule computes the side / row / frame branches of
 frame mask -- no per-candidate control flow, so the same rule runs as
 
 * ``alloc_scan_ref``    -- the numpy reference (exact int64, the oracle
-  of record for this module and the production ``replay="device"`` path),
+  of record for this module and the production ``engine="device"`` path),
 * ``alloc_scan_jax``    -- one ``jax.lax.scan`` over groups (int32),
 * ``alloc_scan_pallas`` -- a Pallas TPU kernel, grid = (candidate tiles,
   groups): TPU grids iterate the trailing axis sequentially, so the

@@ -120,18 +120,23 @@ class PlanCache:
             path.unlink(missing_ok=True)
 
     # ----------------------------------------------------------- warm start
-    def nearest(self, graph_fp: str, hw_sig: list) -> tuple | None:
+    def nearest(self, graph_fp: str, hw_sig: list,
+                require_path: str | None = None) -> tuple | None:
         """Cut tuple of the cached plan closest to ``(graph_fp, hw_sig)``.
 
         Only records of the *same* net family (equal canonical-graph
         fingerprint) are considered -- cut tuples are meaningless across
         different run structures; ``valid_warm_start`` downstream guards
         the residual risk of a fingerprint-equal graph changing shape
-        across schema versions.  Distance is the normalized L1 gap over
-        the numeric hw fields (ti, to, sram_budget, dram_bw, ...), ties
-        broken by record name for determinism.  Returns ``None`` when no
-        family record exists -- including on an exact-key hit's config,
-        which is fine: ``nearest`` is only consulted on misses.
+        across schema versions.  ``require_path`` additionally restricts
+        donors to records whose stored search path matches (the daemon
+        passes ``"exhaustive"`` when seeding a descent-path request, so
+        only oracle-exact argmins ever seed descent searches).  Distance
+        is the normalized L1 gap over the numeric hw fields (ti, to,
+        sram_budget, dram_bw, ...), ties broken by record name for
+        determinism.  Returns ``None`` when no family record exists --
+        including on an exact-key hit's config, which is fine:
+        ``nearest`` is only consulted on misses.
         """
         ref = {name: val for name, val in hw_sig
                if isinstance(val, (int, float))}
@@ -142,6 +147,9 @@ class PlanCache:
                 continue
             meta = wrapper.get("meta") or {}
             if meta.get("graph_fp") != graph_fp or "cuts" not in meta:
+                continue
+            if (require_path is not None
+                    and meta.get("path") != require_path):
                 continue
             dist = 0.0
             for name, val in meta.get("hw_sig", []):

@@ -49,7 +49,10 @@ from repro.core.options import CompileOptions
 # Bumped whenever the canonical encoding, the plan codec, or the cache
 # record layout changes shape: records written under a different schema
 # version are never served (the cache treats them as evictable misses).
-CACHE_SCHEMA_VERSION = 1
+# v2: search records carry the search path ("exhaustive"/"descent") so
+# the warm-start donor filter can tell oracle-exact argmins from descent
+# results; record metadata carries "path" for the same reason.
+CACHE_SCHEMA_VERSION = 2
 
 # Structural LayerNode fields, in hash order.  `idx`, `name` and `inputs`
 # are deliberately absent: indices and edges enter through the signature

@@ -128,8 +128,13 @@ def encode_plan(plan: ExecutionPlan) -> bytes:
         # warm-started compile legitimately prunes MORE than a cold one
         # while producing the identical plan, so it stays out of the
         # record -- otherwise hit/cold byte-identity would break for
-        # warm-compiled records.
-        rec["search"] = {"evaluated": plan.search.evaluated}
+        # warm-compiled records.  `path` IS plan content: whether the
+        # record came from the oracle-exact exhaustive argmin or from
+        # coordinate descent is a deterministic function of the request
+        # (space vs exhaustive_limit), and the warm-start donor filter
+        # keys on it.
+        rec["search"] = {"evaluated": plan.search.evaluated,
+                         "path": plan.search.path}
     return msgpack.packb(rec, use_bin_type=True)
 
 
@@ -162,7 +167,7 @@ def decode_plan(blob: bytes, graph: Graph, hw: FPGAConfig) -> ExecutionPlan:
         search = SearchResult(
             best=cand, evaluated=rec["search"]["evaluated"],
             runs=monotone_runs(blocks), blocks=blocks,
-            pruned=0)
+            pruned=0, path=rec["search"].get("path", "exhaustive"))
     s = rec["sram"]
     stream = np.frombuffer(rec["stream"], dtype=np.uint32)
     return ExecutionPlan(

@@ -25,11 +25,13 @@
   read-only.
 * **warm start** -- a miss first consults :meth:`PlanCache.nearest`
   for the same net family's plan on the closest hw config and seeds
-  the branch-and-bound incumbent with it (``warm_start=`` through
-  ``compile_graph``); applied only where it provably cannot change the
-  plan bytes (exhaustive path, ``prune`` + ``count_pruned`` on -- see
-  :meth:`CompileService._warm_start`), so every cached record is
-  byte-identical to a cold compile of its request.
+  the search with it (``warm_start=`` through ``compile_graph``).  On
+  the exhaustive path (``prune`` + ``count_pruned`` on) this provably
+  cannot change the plan bytes, so every such record is byte-identical
+  to a cold compile.  Descent-path requests (which never promised
+  hit/cold byte-identity) also warm-start since schema v2, but only
+  from donors whose recorded search path is ``"exhaustive"`` -- see
+  :meth:`CompileService._warm_start`.
 * **failure semantics** -- a failed compile fails *that ticket* (the
   exception re-raises from :meth:`Ticket.result`, for every coalesced
   waiter); the daemon and its queue keep serving.  Nothing is cached on
@@ -55,7 +57,7 @@ from repro.core.options import CompileOptions
 from repro.service.cache import DEFAULT_CAPACITY, PlanCache
 from repro.service.canonical import (graph_fingerprint, hw_signature,
                                      request_key)
-from repro.service.codec import decode_plan, encode_plan
+from repro.service.codec import PlanCodecError, decode_plan, encode_plan
 
 
 class ServiceOverloaded(RuntimeError):
@@ -225,15 +227,23 @@ class CompileService:
 
     def _warm_start(self, graph: Graph, fp: str, hw_sig: list,
                     opts: CompileOptions):
-        """Nearest cached cuts, but only when warm-starting provably
-        cannot change the stored plan bytes: the exhaustive
-        branch-and-bound path with ``prune`` + ``count_pruned`` on,
-        where a seeded incumbent only prunes earlier (``evaluated``
-        stays the full enumeration count and the argmin is oracle-
-        exact).  On the coordinate-descent path, or under
-        ``count_pruned=False``, a warm start would shift ``evaluated``
-        and break the cache's hit/cold byte-identity contract, so those
-        requests compile cold."""
+        """Nearest cached cuts, guarded by the request's search path.
+
+        *Exhaustive-path* requests (space within ``exhaustive_limit``,
+        ``prune`` + ``count_pruned`` on) may seed from any family donor:
+        a seeded incumbent only prunes earlier, ``evaluated`` stays the
+        full enumeration count and the argmin is oracle-exact, so the
+        stored plan bytes provably cannot change.  Under
+        ``count_pruned=False`` a warm start would shift ``evaluated``,
+        so those requests compile cold.
+
+        *Descent-path* requests (space beyond the limit) never promised
+        hit/cold byte-identity -- a warm start there is an extra
+        deterministic start that can only improve the result -- but the
+        donor must itself be trustworthy: only records whose stored
+        search path is ``"exhaustive"`` (oracle-exact argmins, recorded
+        per plan since schema v2) are used, so descent results never
+        cascade into other descent searches."""
         if not (opts.prune and opts.count_pruned):
             return None
         from repro.core.cutpoint import monotone_runs, split_blocks
@@ -242,21 +252,29 @@ class CompileService:
         for r in monotone_runs(split_blocks(group_nodes(graph))):
             space *= len(r) + 1
         if space > opts.exhaustive_limit:
-            return None
+            return self.cache.nearest(fp, hw_sig,
+                                      require_path="exhaustive")
         return self.cache.nearest(fp, hw_sig)
 
     def _fulfil(self, ticket: Ticket, graph: Graph, hw: FPGAConfig,
                 opts: CompileOptions) -> ExecutionPlan:
         blob = self.cache.get(ticket.key)
         if blob is not None:
-            ticket.hit = True
-            with self._lock:
-                self.stats["hits"] += 1
-            plan = decode_plan(blob, graph, hw)
-            # verify is scheduling-only: re-run it per request at the
-            # requested mode rather than trusting (or keying on) whatever
-            # mode the record was compiled under
-            return apply_verification(plan, opts.verify, site="serve")
+            try:
+                plan = decode_plan(blob, graph, hw)
+            except PlanCodecError:
+                # stale-schema or undecodable record: a miss, never a
+                # ticket failure -- recompile and overwrite it below
+                blob = None
+            else:
+                ticket.hit = True
+                with self._lock:
+                    self.stats["hits"] += 1
+                # verify is scheduling-only: re-run it per request at
+                # the requested mode rather than trusting (or keying on)
+                # whatever mode the record was compiled under
+                return apply_verification(plan, opts.verify,
+                                          site="serve")
         with self._lock:
             self.stats["misses"] += 1
         fp = graph_fingerprint(graph)
@@ -271,6 +289,9 @@ class CompileService:
                        meta={"graph_fp": fp, "hw_sig": hw_sig,
                              "hw_name": hw.name, "net": graph.name,
                              "cuts": list(plan.candidate.cuts),
+                             "path": (plan.search.path
+                                      if plan.search is not None
+                                      else "policy"),
                              "plan_key": [list(kv) for kv
                                           in opts.plan_key()]})
         return plan

@@ -234,7 +234,7 @@ def test_device_and_journal_interleave_on_one_engine():
 def test_search_device_bit_identity_exhaustive():
     gg, _, _ = _grouped("resnet50")
     a = search(gg, KCU1500)
-    b = search(gg, KCU1500, CompileOptions(replay="device"))
+    b = search(gg, KCU1500, CompileOptions(engine="device"))
     assert a.best.cuts == b.best.cuts
     assert a.evaluated == b.evaluated
     for f in METRICS:
@@ -246,7 +246,7 @@ def test_search_device_bit_identity_exhaustive():
 def test_search_device_bit_identity_descent():
     gg, _, _ = _grouped("mobilenet-v3")
     a = search(gg, KCU1500)
-    b = search(gg, KCU1500, CompileOptions(replay="device"))
+    b = search(gg, KCU1500, CompileOptions(engine="device"))
     assert a.best.cuts == b.best.cuts
     assert a.evaluated == b.evaluated
     for f in METRICS:
@@ -257,7 +257,7 @@ def test_search_parallel_device_bit_identity():
     gg, _, _ = _grouped("resnet50")
     serial = search(gg, KCU1500)
     parallel = search(gg, KCU1500,
-                      CompileOptions(workers=2, replay="device"))
+                      CompileOptions(workers=2, engine="device"))
     assert serial.best.cuts == parallel.best.cuts
     assert serial.evaluated == parallel.evaluated
     for f in METRICS:

@@ -180,10 +180,10 @@ def test_pruned_search_identical_workers2():
 def test_pruned_search_identical_device_replay():
     gg = group_nodes(build_cnn("resnet50"))
     unpruned = search(gg, KCU1500, PRUNE_OPTS.replace(prune=False))
-    pruned = search(gg, KCU1500, PRUNE_OPTS.replace(replay="device"))
+    pruned = search(gg, KCU1500, PRUNE_OPTS.replace(engine="device"))
     assert_results_identical(unpruned, pruned, ctx="device")
     pruned2 = search(gg, KCU1500,
-                     PRUNE_OPTS.replace(workers=2, replay="device"))
+                     PRUNE_OPTS.replace(workers=2, engine="device"))
     assert_results_identical(unpruned, pruned2, ctx="device-workers2")
 
 

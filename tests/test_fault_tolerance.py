@@ -251,11 +251,11 @@ def test_device_replay_falls_back_to_journal_loudly(resnet):
     ev = {("device", victim): chaos.ChaosEvent("raise")}
     with injected(chaos.ChaosInjector(events=ev)):
         with ParallelSearchDriver(workers=2, mp_context="fork") as d:
-            r = d.search(gg, KCU1500, TEST_OPTS.replace(replay="device"))
+            r = d.search(gg, KCU1500, TEST_OPTS.replace(engine="device"))
     assert_results_identical(serial, r, ctx="device-fallback")
     falls = [e for e in r.events if e.kind == "device_fallback"]
     assert [e.task for e in falls] == [victim]
-    assert "journal replay substituted" in falls[0].detail
+    assert "journal engine substituted" in falls[0].detail
 
 
 def test_chaos_hold_gate_mechanics():

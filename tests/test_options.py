@@ -13,8 +13,9 @@ from repro.core.cutpoint import search
 from repro.core.grouping import group_nodes
 from repro.core.hw import KCU1500
 from repro.core.options import (PLAN_FIELDS, SCHEDULE_FIELDS,
-                                CompileOptions, LegacyKnobWarning,
-                                resolve_options)
+                                CompileOptions, EngineSpec,
+                                LegacyKnobWarning, degrade_engine,
+                                resolve_engine, resolve_options)
 from repro.core.search_pool import ParallelSearchDriver
 
 from test_search_pool import TEST_LIMIT, assert_results_identical
@@ -33,7 +34,7 @@ def test_defaults_and_replace():
 
 
 @pytest.mark.parametrize("bad", [
-    {"objective": "bogus"}, {"replay": "tape"}, {"backend": "cuda"},
+    {"objective": "bogus"}, {"engine": "tape"}, {"backend": "cuda"},
     {"verify": "loose"}, {"exhaustive_limit": -1}, {"batch_size": 0},
     {"workers": 0}, {"max_retries": -1}, {"task_deadline_s": 0.0},
 ])
@@ -50,7 +51,7 @@ def test_plan_key_schedule_partition_all_fields():
     assert set(PLAN_FIELDS) | set(SCHEDULE_FIELDS) == names
     assert not set(PLAN_FIELDS) & set(SCHEDULE_FIELDS)
     base = CompileOptions()
-    sched = base.replace(workers=8, batch_size=2, replay="device",
+    sched = base.replace(workers=8, batch_size=2, engine="device",
                          max_retries=0, verify="warn")
     assert sched.plan_key() == base.plan_key()
     assert sched.schedule() != base.schedule()
@@ -69,12 +70,112 @@ def test_options_hashable_and_equal():
     assert hash(CompileOptions(workers=2)) == hash(CompileOptions(workers=2))
 
 
+# ------------------------------------------------------- engine grammar
+@pytest.mark.parametrize("spelling,name,variant,batch", [
+    ("journal", "journal", "", None),
+    ("journal@256", "journal", "", 256),
+    ("device", "device", "reference", None),
+    ("device:reference", "device", "reference", None),
+    ("device:scan", "device", "scan", None),
+    ("device:pallas@2048", "device", "pallas", 2048),
+    ("pipeline:reference", "pipeline", "reference", None),
+    ("pipeline:lax", "pipeline", "lax", None),
+    ("pipeline:pallas", "pipeline", "pallas", None),
+    ("pipeline:lax@512", "pipeline", "lax", 512),
+])
+def test_engine_grammar_accepts(spelling, name, variant, batch):
+    spec = resolve_engine(spelling)
+    assert spec.name == name
+    if variant:                       # "" = engine-default, checked below
+        assert spec.variant == variant
+    assert spec.batch_size == batch
+    # every valid spelling is also a valid CompileOptions value
+    assert CompileOptions(engine=spelling).engine == spelling
+
+
+def test_engine_grammar_default_variants():
+    assert resolve_engine("journal").variant == ""
+    assert resolve_engine("device").variant == "reference"
+    # pipeline auto-selects lax when jax imports (it is baked into the
+    # test environment), the numpy reference otherwise
+    assert resolve_engine("pipeline").variant in ("lax", "reference")
+
+
+@pytest.mark.parametrize("bad", [
+    "tape", "device:cuda", "pipeline:jit", "journal:fast", "device@0",
+    "device@-1", "device@x", "pipeline@", "", 42, None,
+])
+def test_engine_grammar_rejects(bad):
+    with pytest.raises(ValueError):
+        resolve_engine(bad)
+    if isinstance(bad, str):
+        with pytest.raises(ValueError):
+            CompileOptions(engine=bad)
+
+
+def test_engine_spec_spelling_roundtrip():
+    for spelling in ("journal", "journal@64", "device:scan",
+                     "device:pallas@2048", "pipeline:lax@512"):
+        spec = resolve_engine(spelling)
+        assert resolve_engine(spec.spelling()) == spec, spelling
+    assert EngineSpec("journal", "", None).spelling() == "journal"
+
+
+def test_engine_spec_batch_override():
+    """An @N suffix wins over the batch_size field; otherwise the field
+    fills the spec."""
+    assert CompileOptions(engine="journal@64",
+                          batch_size=1024).engine_spec().batch_size == 64
+    assert CompileOptions(engine="journal",
+                          batch_size=77).engine_spec().batch_size == 77
+
+
+@pytest.mark.parametrize("engine,want", [
+    ("journal", "journal"), ("device", "journal"),
+    ("device:pallas", "journal"), ("pipeline:lax", "journal"),
+    ("pipeline:lax@512", "journal@512"), ("device@128", "journal@128"),
+])
+def test_degrade_engine_routes_to_journal(engine, want):
+    assert degrade_engine(engine) == want
+    # degraded spellings are themselves valid and stable
+    assert degrade_engine(want) == want
+
+
 # ------------------------------------------------------------ the shim
 def test_legacy_kwargs_warn_and_map():
     with pytest.warns(LegacyKnobWarning, match="compile_test"):
         opts = resolve_options(None, {"workers": 3, "prune": False},
                                site="compile_test")
     assert opts == CompileOptions(workers=3, prune=False)
+
+
+@pytest.mark.parametrize("replay,engine", [
+    ("journal", "journal"), ("device", "device"),
+])
+def test_retired_replay_knob_maps_onto_engine(replay, engine):
+    """The retired ``replay=`` spelling lands on ``engine=`` with the
+    meaning unchanged, under the usual LegacyKnobWarning."""
+    with pytest.warns(LegacyKnobWarning):
+        opts = resolve_options(None, {"replay": replay}, site="s")
+    assert opts == CompileOptions(engine=engine)
+
+
+def test_replay_plus_engine_is_type_error():
+    with pytest.raises(TypeError, match="not both"):
+        resolve_options(None, {"replay": "device", "engine": "device"},
+                        site="s")
+
+
+def test_retired_replay_shim_equivalent_search():
+    """End to end: the legacy ``replay="device"`` spelling must produce
+    the identical SearchResult as ``engine="device"`` via options."""
+    gg = group_nodes(build_cnn("vgg16-conv"))
+    via_opts = search(gg, KCU1500,
+                      TEST_OPTS.replace(engine="device"))
+    with pytest.warns(LegacyKnobWarning):
+        via_legacy = search(gg, KCU1500, replay="device",
+                            exhaustive_limit=TEST_LIMIT)
+    assert_results_identical(via_opts, via_legacy, ctx="shim-replay")
 
 
 def test_unknown_legacy_kwarg_is_type_error():

@@ -141,7 +141,7 @@ def test_request_key_plan_fields_only():
     g = build_cnn("vgg16-conv", 64)
     base = request_key(g, KCU1500, TEST_OPTS)
     sched = request_key(g, KCU1500, TEST_OPTS.replace(
-        workers=8, replay="device", verify="strict", batch_size=7))
+        workers=8, engine="device", verify="strict", batch_size=7))
     assert sched == base
     assert request_key(g, KCU1500, TEST_OPTS.replace(prune=False)) != base
     assert request_key(g, KCU1500,

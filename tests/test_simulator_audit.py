@@ -74,7 +74,7 @@ def test_compiled_plan_verifies_strict_device_replay(name, size):
     """The device-replay search path produces the same verifiable plan:
     strict verification holds on both allocator replay engines."""
     plan = compile_graph(build_cnn(name, size),
-                         options=AUDIT_OPTS.replace(replay="device",
+                         options=AUDIT_OPTS.replace(engine="device",
                                                     verify="strict"))
     assert [d for d in plan.diagnostics if d.severity.value == "error"] \
         == []
